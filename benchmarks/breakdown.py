@@ -1,0 +1,59 @@
+"""Paper Tables 4+5: ablation breakdown (ResNet50, ImageNet-1k, 3 A10 nodes).
+
+Variants:
+  Redox-no-optimization  = random refill selection, no prefetch
+  Redox-no-prefetching   = max-fill selection,     no prefetch
+  Redox-random-selection = random refill selection, prefetch
+  Redox (full)           = max-fill selection,      prefetch
+Paper ordering: 0.93 > 0.87 > 0.76 > 0.71 h epoch; prefetching collapses
+remote requests (8.54e5 -> 0.46e5) and both optimizations cut misses.
+"""
+
+from __future__ import annotations
+
+from .calibration import Scenario
+from .common import redox_epoch
+
+VARIANTS = [
+    ("no_optimization", "random", False),
+    ("no_prefetching", "max_fill", False),
+    ("random_selection", "random", True),
+    ("full", "max_fill", True),
+]
+
+
+def run() -> list[dict]:
+    scn = Scenario("imagenet1k", "A10", "resnet50", nodes=3)
+    rows = []
+    for name, policy, prefetch in VARIANTS:
+        res, t = redox_epoch(scn, policy=policy, prefetch=prefetch)
+        s = res.stats
+        rows.append(
+            dict(
+                variant=name, epoch_s=t,
+                memory_misses=s.memory_misses,
+                remote_requests=s.remote_requests,
+                prefetch_hits=s.remote_prefetch_hits,
+                mean_fill_rate=s.mean_fill_rate,
+                wasted_gb=s.wasted_bytes / 1e9,
+            )
+        )
+    return rows
+
+
+def main():
+    print("Tables 4+5 — ablation breakdown (ResNet50, ImageNet-1k-scaled, 3xA10)")
+    print(
+        f"{'variant':18s} {'epoch_s':>8s} {'misses':>8s} {'remote_req':>10s} "
+        f"{'pf_hits':>8s} {'fill_rate':>9s} {'wasted_GB':>9s}"
+    )
+    for r in run():
+        print(
+            f"{r['variant']:18s} {r['epoch_s']:8.1f} {r['memory_misses']:8d} "
+            f"{r['remote_requests']:10d} {r['prefetch_hits']:8d} "
+            f"{r['mean_fill_rate']:9.3f} {r['wasted_gb']:9.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Calibration of the timing model to the paper's setups (Table 1-3).
+
+Hardware profiles mirror Table 2; per-sample compute times are
+reverse-engineered from Table 1's No-I/O residuals (epoch − I/O overhead).
+Datasets are scaled down by ``SCALE`` (default 20x: 1.2M files -> 61k) with
+memory budgets scaled identically, which preserves every ratio the paper
+reports (hit rates, fill rates, speedups) while keeping the protocol
+simulation wall-time tractable on one CPU; ``--full`` restores 1x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ChunkingPlan, PipelineTimeModel
+from repro.data.synthetic import paper_like_sizes
+
+SCALE = 20
+
+# --- storage/network profiles (paper Table 2) -------------------------------
+# NAS small-file random reads: ~8 ms head overhead per op; SEQUENTIAL
+# streaming is far faster (enterprise NAS ≥ 500 MB/s; Lustre ≥ 1.5 GB/s) —
+# this asymmetry is exactly what the paper's batched chunk reads exploit.
+# Calibrated so (a) PyTorch-loader I/O on ImageNet-1k/P100 reproduces
+# Table 1's overhead ordering and (b) Fig 13's I/O-throughput-vs-chunk-size
+# curve shape matches.
+TIME_MODELS = {
+    "A10": PipelineTimeModel(
+        disk_bw=500e6, file_overhead=8e-3, chunk_overhead=8e-3,
+        net_bw=0.38e9, net_latency=1e-3,
+    ),
+    "P100": PipelineTimeModel(
+        disk_bw=500e6, file_overhead=8e-3, chunk_overhead=8e-3,
+        net_bw=0.38e9, net_latency=1e-3,
+    ),
+    "A100": PipelineTimeModel(
+        disk_bw=1.5e9, file_overhead=4e-3, chunk_overhead=4e-3,
+        net_bw=3e9, net_latency=5e-4,
+    ),
+}
+
+MEMORY_PER_NODE = {"A10": 12e9, "P100": 56e9, "A100": 240e9}  # usable for data
+
+# --- datasets (Table 3) ------------------------------------------------------
+DATASETS = {
+    "imagenet1k": dict(num_files=1_200_000, profile="imagenet1k"),
+    "imagenet21k": dict(num_files=13_000_000, profile="imagenet21k"),
+    "librispeech": dict(num_files=280_000, profile="librispeech"),
+}
+
+# --- per-sample GPU compute (s), from Table 1 No-I/O residuals ---------------
+MODEL_COMPUTE = {
+    ("squeezenet", "A10"): 0.40e-3,
+    ("mobilenetv3", "A10"): 0.85e-3,
+    ("resnet50", "A10"): 1.6e-3,
+    ("squeezenet", "P100"): 1.1e-3,   # (1.40-1.27)h over 1.28M samples x3 nodes
+    ("mobilenetv3", "P100"): 2.4e-3,  # (1.53-1.25)h
+    ("resnet50", "P100"): 4.9e-3,     # (1.65-1.07)h
+    ("wav2vec2", "A10"): 6.0e-3,
+    ("densenet121", "A100"): 0.9e-3,
+    ("vgg16", "A100"): 1.2e-3,
+}
+
+BATCH = {
+    "squeezenet": 512, "mobilenetv3": 256, "resnet50": 128,
+    "wav2vec2": 64, "densenet121": 256, "vgg16": 256,
+}
+
+
+@dataclasses.dataclass
+class Scenario:
+    dataset: str
+    hw: str
+    model: str
+    nodes: int
+    scale: int = SCALE
+    chunk_size: int = 64
+    remote_limit: float = 1.5e9
+    seed: int = 0
+
+    @property
+    def num_files(self) -> int:
+        return DATASETS[self.dataset]["num_files"] // self.scale
+
+    def sizes(self) -> np.ndarray:
+        return paper_like_sizes(
+            DATASETS[self.dataset]["profile"], self.num_files, seed=self.seed
+        )
+
+    def plan(self, memory_bytes: float | None = None) -> ChunkingPlan:
+        mem = (memory_bytes or MEMORY_PER_NODE[self.hw]) / self.scale
+        return ChunkingPlan.create(
+            self.sizes(), self.chunk_size,
+            memory_bytes=int(mem * self.nodes), seed=self.seed,
+        )
+
+    @property
+    def node_memory(self) -> float:
+        return MEMORY_PER_NODE[self.hw] / self.scale
+
+    @property
+    def remote_limit_scaled(self) -> float:
+        return self.remote_limit / self.scale
+
+    @property
+    def compute_per_step(self) -> float:
+        return MODEL_COMPUTE[(self.model, self.hw)] * BATCH[self.model]
+
+    @property
+    def batch(self) -> int:
+        return BATCH[self.model]
+
+    @property
+    def time_model(self) -> PipelineTimeModel:
+        return TIME_MODELS[self.hw]

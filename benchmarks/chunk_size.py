@@ -1,0 +1,63 @@
+"""Paper Figs. 13+14: chunk-size sensitivity (SqueezeNet, 3 A10 nodes).
+
+Sweeps chunk_size 2..256 (+1 = the PyTorch per-file baseline) and reports
+I/O throughput, mean times each chunk is loaded per epoch, and epoch time.
+Paper: throughput rises monotonically with chunk size, but re-loads rise
+too; epoch time bottoms out at chunk_size = 64.
+"""
+
+from __future__ import annotations
+
+from repro.core import EpochSampler, PyTorchStyleLoader, run_baseline_epoch
+
+from .calibration import Scenario
+from .common import epoch_time, redox_epoch
+
+CHUNK_SIZES = [2, 8, 16, 32, 64, 128, 256]
+
+
+def run() -> list[dict]:
+    rows = []
+    base = Scenario("imagenet1k", "A10", "squeezenet", nodes=3)
+    # chunk_size = 1 -> native per-file loader
+    plan = base.plan()
+    loader = PyTorchStyleLoader(plan, base.nodes, int(base.node_memory))
+    sampler = EpochSampler(plan.num_files, base.nodes, seed=base.seed + 1)
+    stats, io = run_baseline_epoch(loader, sampler, 0, base.batch)
+    t = epoch_time(base, io)
+    io_s = sum(base.time_model.io_time(s) for steps in io for s in steps)
+    rows.append(
+        dict(chunk=1, epoch_s=t, throughput_mb_s=stats.disk_bytes / 1e6 / max(io_s, 1e-9),
+             loads_per_chunk=1.0, wasted_gb=0.0)
+    )
+    for c in CHUNK_SIZES:
+        scn = Scenario("imagenet1k", "A10", "squeezenet", nodes=3, chunk_size=c)
+        res, t = redox_epoch(scn)
+        s = res.stats
+        io_s = sum(
+            scn.time_model.io_time(x) for steps in res.per_node_step_io for x in steps
+        )
+        plan_c = scn.plan()
+        rows.append(
+            dict(
+                chunk=c, epoch_s=t,
+                throughput_mb_s=s.disk_bytes / 1e6 / max(io_s, 1e-9),
+                loads_per_chunk=s.chunk_loads / plan_c.num_chunks,
+                wasted_gb=s.wasted_bytes / 1e9,
+            )
+        )
+    return rows
+
+
+def main():
+    print("Figs 13+14 — chunk-size sensitivity (SqueezeNet, ImageNet-1k-scaled, 3xA10)")
+    print(f"{'chunk':>5s} {'epoch_s':>8s} {'IO MB/s':>8s} {'loads/chunk':>11s} {'wasted_GB':>9s}")
+    for r in run():
+        print(
+            f"{r['chunk']:5d} {r['epoch_s']:8.1f} {r['throughput_mb_s']:8.1f} "
+            f"{r['loads_per_chunk']:11.2f} {r['wasted_gb']:9.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

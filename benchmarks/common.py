@@ -1,0 +1,71 @@
+"""Shared benchmark driver: run one epoch of each loader under a scenario."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    Cluster,
+    CoorDLLoader,
+    EpochSampler,
+    NoIOLoader,
+    PyTorchStyleLoader,
+    run_baseline_epoch,
+)
+
+from .calibration import Scenario
+
+__all__ = ["run_scenario", "epoch_time", "redox_epoch"]
+
+
+def epoch_time(scn: Scenario, per_node_step_io) -> float:
+    return scn.time_model.epoch_time(per_node_step_io, scn.compute_per_step)
+
+
+def redox_epoch(
+    scn: Scenario,
+    *,
+    policy: str = "max_fill",
+    prefetch: bool = True,
+    epoch: int = 0,
+    chunk_size: int | None = None,
+    remote_limit: float | None = None,
+):
+    plan = scn.plan() if chunk_size is None else Scenario(
+        **{**scn.__dict__, "chunk_size": chunk_size}
+    ).plan()
+    cluster = Cluster(
+        plan,
+        scn.nodes,
+        remote_memory_limit_bytes=int(remote_limit or scn.remote_limit_scaled),
+        # Deep lookahead so remote-memory usage is limit-bound, not
+        # window-bound (paper Fig. 12 saturates at ~1.5 GB of prefetches).
+        prefetch_window=512,
+        policy=policy,
+        prefetch=prefetch,
+        seed=scn.seed,
+    )
+    sampler = EpochSampler(plan.num_files, scn.nodes, seed=scn.seed + 1)
+    res = cluster.run_epoch(sampler, epoch, scn.batch, collect_returned=False)
+    return res, epoch_time(scn, res.per_node_step_io)
+
+
+def run_scenario(scn: Scenario, loaders=("pytorch", "coordl", "redox", "no_io")):
+    """Returns {loader: (epoch_time_s, stats)} for one scenario."""
+    plan = scn.plan()
+    sampler = EpochSampler(plan.num_files, scn.nodes, seed=scn.seed + 1)
+    out = {}
+    for name in loaders:
+        t0 = time.time()
+        if name == "redox":
+            res, t = redox_epoch(scn)
+            out[name] = (t, res.stats)
+        else:
+            loader = {
+                "pytorch": lambda: PyTorchStyleLoader(plan, scn.nodes, int(scn.node_memory)),
+                "coordl": lambda: CoorDLLoader(plan, scn.nodes, int(scn.node_memory)),
+                "no_io": lambda: NoIOLoader(plan, scn.nodes),
+            }[name]()
+            stats, io = run_baseline_epoch(loader, sampler, 0, scn.batch)
+            out[name] = (epoch_time(scn, io), stats)
+    return out

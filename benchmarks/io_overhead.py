@@ -1,0 +1,38 @@
+"""Paper Table 1: I/O overhead percentage of epoch time (PyTorch loader).
+
+Reproduces the motivating measurement: train three CV models on
+ImageNet-1k (P100 profile, 3 nodes) with the native per-file loader and
+report epoch time, I/O-only time, and overhead percentage.
+"""
+
+from __future__ import annotations
+
+from .calibration import Scenario
+from .common import run_scenario
+
+PAPER = {"squeezenet": 91, "mobilenetv3": 82, "resnet50": 65}
+
+
+def run() -> list[tuple]:
+    rows = []
+    for model, paper_pct in PAPER.items():
+        scn = Scenario("imagenet1k", "P100", model, nodes=3)
+        res = run_scenario(scn, loaders=("pytorch", "no_io"))
+        t_total = res["pytorch"][0]
+        t_compute = res["no_io"][0]
+        io_pct = 100.0 * (t_total - t_compute) / t_total
+        rows.append(
+            ("table1/io_overhead", model, t_total, t_compute, io_pct, paper_pct)
+        )
+    return rows
+
+
+def main():
+    print("Table 1 — I/O overhead (PyTorch loader, ImageNet-1k-scaled, 3xP100)")
+    print(f"{'model':14s} {'epoch_s':>9s} {'compute_s':>9s} {'io_pct':>7s} {'paper':>6s}")
+    for _, model, t, c, pct, paper in run():
+        print(f"{model:14s} {t:9.1f} {c:9.1f} {pct:6.1f}% {paper:5d}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Figs. 9/10/11: overall epoch time — Redox vs PyTorch/CoorDL/No-I/O.
+
+Scenarios mirror the paper's evaluation matrix:
+  Fig. 9  — wav2vec2 on LibriSpeech, 1/3/5 A10 nodes
+  Fig. 10 — squeezenet/mobilenetv3/resnet50 on ImageNet-1k, 3+5 A10 and
+            1+3 P100 nodes
+  Fig. 11 — densenet121/vgg16 on ImageNet-21k, 2+3 A100 nodes
+Paper headline: Redox up to 4.57x vs PyTorch, up to 1.96x vs CoorDL.
+"""
+
+from __future__ import annotations
+
+from .calibration import Scenario
+from .common import run_scenario
+
+SCENARIOS = [
+    # (figure, dataset, hw, model, nodes)
+    ("fig9", "librispeech", "A10", "wav2vec2", 1),
+    ("fig9", "librispeech", "A10", "wav2vec2", 3),
+    ("fig9", "librispeech", "A10", "wav2vec2", 5),
+    ("fig10a", "imagenet1k", "A10", "squeezenet", 3),
+    ("fig10a", "imagenet1k", "A10", "resnet50", 3),
+    ("fig10b", "imagenet1k", "A10", "squeezenet", 5),
+    ("fig10c", "imagenet1k", "P100", "squeezenet", 1),
+    ("fig10c", "imagenet1k", "P100", "resnet50", 1),
+    ("fig10d", "imagenet1k", "P100", "squeezenet", 3),  # paper's 4.57x headline cell
+    ("fig10d", "imagenet1k", "P100", "resnet50", 3),
+    ("fig11", "imagenet21k", "A100", "densenet121", 3),
+    ("fig11", "imagenet21k", "A100", "vgg16", 3),
+]
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    scenarios = SCENARIOS if not quick else SCENARIOS[:4]
+    for fig, ds, hw, model, nodes in scenarios:
+        scale = 100 if ds == "imagenet21k" else 20
+        scn = Scenario(ds, hw, model, nodes=nodes, scale=scale)
+        res = run_scenario(scn)
+        t = {k: v[0] for k, v in res.items()}
+        rows.append(
+            dict(
+                fig=fig, dataset=ds, hw=hw, model=model, nodes=nodes,
+                pytorch_s=t["pytorch"], coordl_s=t["coordl"],
+                redox_s=t["redox"], no_io_s=t["no_io"],
+                speedup_vs_pytorch=t["pytorch"] / t["redox"],
+                speedup_vs_coordl=t["coordl"] / t["redox"],
+            )
+        )
+    return rows
+
+
+def main(quick: bool = False):
+    print("Figs 9-11 — overall epoch time (scaled datasets; ratios comparable to paper)")
+    hdr = f"{'fig':7s} {'model':12s} {'hw':5s} {'n':>2s} {'pytorch':>9s} {'coordl':>9s} {'redox':>9s} {'no_io':>9s} {'xPT':>6s} {'xCDL':>6s}"
+    print(hdr)
+    for r in run(quick):
+        print(
+            f"{r['fig']:7s} {r['model']:12s} {r['hw']:5s} {r['nodes']:2d} "
+            f"{r['pytorch_s']:9.1f} {r['coordl_s']:9.1f} {r['redox_s']:9.1f} "
+            f"{r['no_io_s']:9.1f} {r['speedup_vs_pytorch']:6.2f} {r['speedup_vs_coordl']:6.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

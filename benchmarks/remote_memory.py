@@ -1,0 +1,45 @@
+"""Paper Table 6 + Fig. 12: remote-abstract-memory limit sweep.
+
+SqueezeNet, ImageNet-1k, 3 A10 nodes; limits 50 MB .. 3 GB (scaled).
+Paper: usage saturates ~1.5 GB; epoch time is best there (0.63 h) and
+regresses slightly beyond (memory stolen from the local abstract memory).
+"""
+
+from __future__ import annotations
+
+from .calibration import Scenario
+from .common import redox_epoch
+
+LIMITS = [50e6, 500e6, 1e9, 1.5e9, 2e9, 3e9]
+
+
+def run() -> list[dict]:
+    rows = []
+    for limit in LIMITS:
+        scn = Scenario("imagenet1k", "A10", "squeezenet", nodes=3)
+        res, t = redox_epoch(scn, remote_limit=limit / scn.scale)
+        peak = max(s.peak_remote_bytes for s in res.node_stats)
+        rows.append(
+            dict(
+                limit_gb=limit / 1e9,
+                epoch_s=t,
+                peak_remote_gb=peak * scn.scale / 1e9,  # unscaled equivalent
+                prefetch_hits=res.stats.remote_prefetch_hits,
+                remote_requests=res.stats.remote_requests,
+            )
+        )
+    return rows
+
+
+def main():
+    print("Table 6 + Fig 12 — remote abstract memory limit sweep (SqueezeNet, 3xA10)")
+    print(f"{'limit_GB':>8s} {'epoch_s':>8s} {'peak_GB':>8s} {'pf_hits':>8s} {'remote_req':>10s}")
+    for r in run():
+        print(
+            f"{r['limit_gb']:8.2f} {r['epoch_s']:8.1f} {r['peak_remote_gb']:8.2f} "
+            f"{r['prefetch_hits']:8d} {r['remote_requests']:10d}"
+        )
+
+
+if __name__ == "__main__":
+    main()

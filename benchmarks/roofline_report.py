@@ -1,0 +1,28 @@
+"""Roofline report: renders artifacts/dryrun.jsonl into the §Roofline table.
+
+(The dry-run itself needs 512 emulated devices and is run separately via
+``python -m repro.launch.dryrun``; this benchmark consumes its artifacts so
+``python -m benchmarks.run`` stays runnable in a default process.)
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+ART = Path("artifacts/dryrun.jsonl")
+
+
+def main():
+    if not ART.exists():
+        print("roofline: no artifacts/dryrun.jsonl yet — run repro.launch.dryrun first")
+        return
+    from repro.launch.roofline import analyze, load_rows, to_markdown
+
+    an = analyze(load_rows(ART))
+    ok = [a for a in an if a["status"] == "ok"]
+    print(f"roofline: {len(ok)} compiled cells, {len(an) - len(ok)} skips")
+    print(to_markdown(an, None))
+
+
+if __name__ == "__main__":
+    main()

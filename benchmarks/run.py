@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Prints per-benchmark tables plus a machine-readable `name,value,derived`
+CSV summary at the end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced scenario grid")
+    args = ap.parse_args()
+
+    from . import breakdown, chunk_size, convergence, io_overhead, overall, roofline_report
+
+    csv_rows: list[tuple] = []
+
+    def section(title, fn):
+        print("\n" + "=" * 78)
+        print(title)
+        print("=" * 78)
+        t0 = time.time()
+        fn()
+        csv_rows.append((title.split(" ")[0], f"{time.time()-t0:.1f}s"))
+
+    section("Table 1: I/O overhead", io_overhead.main)
+    section("Figs 9-11: overall speedups", lambda: overall.main(quick=args.quick))
+    section("Tables 4+5: ablation breakdown", breakdown.main)
+    if not args.quick:
+        from . import remote_memory
+
+        section("Table 6 + Fig 12: remote memory sweep", remote_memory.main)
+    section("Figs 13+14: chunk-size sensitivity", chunk_size.main)
+    section("Fig 15 + Table 7: convergence parity", convergence.main)
+    section("Roofline (from dry-run artifacts)", roofline_report.main)
+
+    print("\nname,us_per_call,derived")
+    for name, t in csv_rows:
+        print(f"{name},{t},see section above")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Distributed I/O demo: ownership, prefetching, failure, elastic remap.
+
+Walks the paper's Fig. 5/6 machinery on a 4-node cluster with live
+narration: remote misses trigger owner reads + opportunistic prefetch;
+mid-epoch we kill a node and show the ownership remap preserving the
+exactly-once guarantee; finally the epoch-time model prices the run vs the
+PyTorch/CoorDL baselines.
+
+    PYTHONPATH=src python examples/distributed_io_demo.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    ChunkingPlan,
+    Cluster,
+    CoorDLLoader,
+    EpochSampler,
+    PipelineTimeModel,
+    PyTorchStyleLoader,
+    run_baseline_epoch,
+)
+from repro.data.synthetic import paper_like_sizes
+
+
+def main():
+    n, nodes = 8000, 4
+    sizes = paper_like_sizes("imagenet1k", n, seed=0)
+    plan = ChunkingPlan.create(sizes, chunk_size=16, memory_bytes=int(sizes.sum() // 4), seed=1)
+    print(f"dataset: {n} files ({sizes.sum()/1e9:.2f} GB), {plan.num_chunks} chunks, "
+          f"{plan.num_groups} groups; global memory = 25% of dataset")
+
+    cluster = Cluster(plan, nodes, remote_memory_limit_bytes=60_000_000, seed=2)
+    sampler = EpochSampler(n, nodes, seed=3)
+    seqs = cluster.begin_epoch(sampler, 0)
+
+    # --- phase 1: run 60% of the epoch normally ---------------------------
+    io = {}
+    upto = int(len(seqs[0]) * 0.6)
+    consumed = []
+    for r in range(nodes):
+        for pos in range(upto):
+            f, _ = cluster.access(r, pos, int(seqs[r][pos]), io)
+            consumed.append(f)
+    agg = cluster.nodes[0].stats
+    for s in cluster.nodes[1:]:
+        agg = agg.merge(s.stats)
+    print(f"\n60% mark: hits={agg.local_hits} misses={agg.memory_misses} "
+          f"remote_req={agg.remote_requests} prefetch_hits={agg.remote_prefetch_hits} "
+          f"fill_rate={agg.mean_fill_rate:.2f}")
+
+    # --- phase 2: node 3 dies; elastic remap ------------------------------
+    print("\n!! node 3 fails — remapping ownership, redistributing its tail")
+    cluster.fail_node(3, processed_upto=upto)
+    for r in range(3):
+        seq = cluster.sequences[r]
+        for pos in range(upto, len(seq)):
+            f, _ = cluster.access(r, pos, int(seq[pos]), io)
+            consumed.append(f)
+    assert sorted(consumed) == list(range(n))
+    print(f"epoch completed by 3 survivors; exactly-once verified over {n} files")
+
+    # --- phase 3: price a clean epoch vs baselines ------------------------
+    tm = PipelineTimeModel(disk_bw=200e6, file_overhead=8e-3, chunk_overhead=8e-3,
+                           net_bw=0.38e9, net_latency=1e-3)
+    compute = 0.2  # s per step (GPU budget)
+    batch = 128
+    cluster2 = Cluster(plan, nodes, remote_memory_limit_bytes=60_000_000, seed=2)
+    res = cluster2.run_epoch(sampler, 1, batch, collect_returned=False)
+    t_redox = tm.epoch_time(res.per_node_step_io, compute)
+    for name, mk in (
+        ("pytorch", lambda: PyTorchStyleLoader(plan, nodes, int(sizes.sum() // 16))),
+        ("coordl", lambda: CoorDLLoader(plan, nodes, int(sizes.sum() // 16))),
+    ):
+        _, io_b = run_baseline_epoch(mk(), sampler, 1, batch)
+        t = tm.epoch_time(io_b, compute)
+        print(f"epoch time {name:8s}: {t:7.1f}s  (redox speedup {t/t_redox:.2f}x)")
+    print(f"epoch time redox   : {t_redox:7.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Redox core: batched random access with file redirection (the paper's contribution)."""
+
+from .abstract_memory import AbstractMemory
+from .baselines import CoorDLLoader, NoIOLoader, PyTorchStyleLoader, run_baseline_epoch
+from .chunking import ChunkingPlan
+from .distributed import Cluster, EpochResult, RemoteMemory
+from .loader import RedoxLoader
+from .protocol import LocalNode, RequestResult
+from .sampler import EpochSampler
+from .stats import NodeStats, PipelineTimeModel, StepIO
+from .storage import ChunkStore
+
+__all__ = [
+    "AbstractMemory",
+    "ChunkingPlan",
+    "ChunkStore",
+    "Cluster",
+    "CoorDLLoader",
+    "EpochResult",
+    "EpochSampler",
+    "LocalNode",
+    "NoIOLoader",
+    "NodeStats",
+    "PipelineTimeModel",
+    "PyTorchStyleLoader",
+    "RedoxLoader",
+    "RemoteMemory",
+    "RequestResult",
+    "run_baseline_epoch",
+    "StepIO",
+]

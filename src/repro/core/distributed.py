@@ -1,0 +1,423 @@
+"""Distributed Redox: ownership, remote access, opportunistic prefetch (paper §3.4).
+
+Memory organisation (Fig. 5): every node shares one view of the global
+abstract memory. Each abstract chunk (= chunk group) has a single *owner*
+node which also stores the group's chunks on its local disk. Owners run the
+unmodified local protocol; non-owners reach a group only through its owner.
+
+Opportunistic prefetch (Fig. 6): on a remote miss the requester piggybacks
+its current sequence position and its remaining remote-memory budget. The
+owner serves the miss via the local protocol, then walks the requester's
+*pre-shared* access sequence over the next ``prefetch_window`` positions and
+ships any file that (a) it owns, (b) is already resident in its abstract
+memory (opportunistic — never loads from disk for a prefetch), (c) whose
+abstract location is provably vacant on the requester ("Prefetch Check
+List": no outstanding prefetch to that location), and (d) fits the
+requester's remote-memory budget. A shipped file is consumed at the sender
+immediately — which empties sender slots early and *raises* later refill
+fill-rates (Fig. 7's positive side-effect).
+
+Fault tolerance: :meth:`Cluster.remap_ownership` implements the elastic
+ownership remap described in DESIGN.md §5 — on node loss the dead node's
+groups are reassigned to survivors, its *memory* contents are lost (those
+files were not yet consumed, so the new owner simply re-fetches them from
+the replicated chunk store), and its consumption journal (4 bytes/file,
+durably logged in any real deployment) is recovered so exactly-once is
+preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .chunking import ChunkingPlan
+from .protocol import LocalNode
+from .sampler import EpochSampler
+from .stats import NodeStats, StepIO
+
+__all__ = ["Cluster", "EpochResult", "RemoteMemory"]
+
+
+def _build_loc_index(locs: np.ndarray) -> dict[int, np.ndarray]:
+    """location -> sorted positions at which a node's sequence touches it."""
+    if locs.size == 0:
+        return {}
+    order = np.argsort(locs, kind="stable")
+    sorted_locs = locs[order]
+    cuts = np.nonzero(np.diff(sorted_locs))[0] + 1
+    starts = np.concatenate([[0], cuts])
+    ends = np.concatenate([cuts, [locs.size]])
+    return {
+        int(sorted_locs[a]): np.sort(order[a:b]).astype(np.int64)
+        for a, b in zip(starts, ends)
+    }
+
+
+class RemoteMemory:
+    """Requester-side bounded cache of prefetched files, keyed by location."""
+
+    def __init__(self, limit_bytes: int, file_sizes: np.ndarray):
+        self.limit_bytes = int(limit_bytes)
+        self._sizes = file_sizes
+        self._data: dict[int, tuple[int, bytes | None]] = {}  # loc -> (file, payload)
+        self.used_bytes = 0
+        self.peak_bytes = 0
+
+    def __contains__(self, loc: int) -> bool:
+        return loc in self._data
+
+    @property
+    def free_bytes(self) -> int:
+        return self.limit_bytes - self.used_bytes
+
+    def put(self, loc: int, file_id: int, data: bytes | None = None) -> None:
+        size = int(self._sizes[file_id])
+        assert loc not in self._data, "prefetch landed on an occupied location"
+        assert size <= self.free_bytes, "prefetch overran the remote-memory budget"
+        self._data[loc] = (file_id, data)
+        self.used_bytes += size
+        self.peak_bytes = max(self.peak_bytes, self.used_bytes)
+
+    def take(self, loc: int) -> tuple[int, bytes | None]:
+        file_id, data = self._data.pop(loc)
+        self.used_bytes -= int(self._sizes[file_id])
+        return file_id, data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+
+@dataclasses.dataclass
+class EpochResult:
+    stats: NodeStats                      # cluster-wide aggregate
+    node_stats: list[NodeStats]
+    per_node_step_io: list[list[StepIO]]  # input to PipelineTimeModel
+    returned: list[np.ndarray]            # per node: files actually consumed
+
+
+class Cluster:
+    """In-process distributed Redox cluster (protocol-exact, timing-modelled).
+
+    Flags reproduce the paper's ablations (Table 4/5):
+
+    * ``policy="max_fill", prefetch=True``   -> Brand
+    * ``policy="random",   prefetch=True``   -> Brand-random-selection
+    * ``policy="max_fill", prefetch=False``  -> Brand-no-prefetching
+    * ``policy="random",   prefetch=False``  -> Brand-no-optimization
+    """
+
+    def __init__(
+        self,
+        plan: ChunkingPlan,
+        num_nodes: int,
+        *,
+        remote_memory_limit_bytes: int = 1 << 62,
+        prefetch_window: int = 64,
+        policy: str = "max_fill",
+        prefetch: bool = True,
+        seed: int = 0,
+        store=None,
+    ):
+        self.plan = plan
+        self.num_nodes = num_nodes
+        self.prefetch_window = prefetch_window
+        self.prefetch = prefetch
+        # Contiguous group ranges per owner: data is partitioned across node
+        # disks before training (paper §3.4).
+        g = np.arange(plan.num_groups, dtype=np.int64)
+        self.owner_of_group = np.minimum(
+            g * num_nodes // max(plan.num_groups, 1), num_nodes - 1
+        ).astype(np.int32)
+        self.nodes = [
+            LocalNode(plan, policy=policy, seed=(seed, 7, r), store=store)
+            for r in range(num_nodes)
+        ]
+        self.remote_mem = [
+            RemoteMemory(remote_memory_limit_bytes, plan.file_sizes)
+            for _ in range(num_nodes)
+        ]
+        # pending[o][r]: location -> sequence position of r when the prefetch
+        # was sent. Mirrors r's remote memory restricted to o-owned locations.
+        self.pending: list[list[dict[int, int]]] = [
+            [dict() for _ in range(num_nodes)] for _ in range(num_nodes)
+        ]
+        self.sequences: list[np.ndarray] | None = None
+        self._loc_of_seq: list[np.ndarray] | None = None
+        self._loc_positions: list[dict[int, np.ndarray]] | None = None
+        self.failed = np.zeros(num_nodes, dtype=bool)
+
+    # ------------------------------------------------------------ lifecycle
+    def begin_epoch(self, sampler: EpochSampler, epoch: int) -> list[np.ndarray]:
+        for node in self.nodes:
+            node.begin_epoch()
+        for rm in self.remote_mem:
+            assert len(rm) == 0, "remote abstract memory not drained"
+        for row in self.pending:
+            for d in row:
+                d.clear()
+        self.sequences = sampler.node_sequences(epoch)
+        # Per-node position index: location -> sorted positions at which the
+        # node will access it. Owners use this to run the Prefetch Check List
+        # without any extra communication (sequences are pre-shared).
+        self._loc_of_seq = [self.plan.locations_of_files(s) for s in self.sequences]
+        self._loc_positions = [_build_loc_index(locs) for locs in self._loc_of_seq]
+        return self.sequences
+
+    # -------------------------------------------------------------- access
+    def access(
+        self, r: int, pos: int, file_id: int, io_by_node: dict[int, StepIO]
+    ) -> tuple[int, bytes | None]:
+        """Node ``r`` performs the access at position ``pos`` of its sequence.
+
+        Returns ``(returned_file_id, payload)`` — the payload is None in
+        simulation mode (no ChunkStore attached).
+        """
+        plan = self.plan
+        g = plan.group_of_file(file_id)
+        o = int(self.owner_of_group[g])
+        stats_r = self.nodes[r].stats
+
+        if o == r:
+            res = self.nodes[r].request(file_id)
+            io_by_node.setdefault(r, StepIO()).add(res.io)
+            return res.file_id, res.data
+
+        loc = plan.location_of_file(file_id)
+        rm = self.remote_mem[r]
+        if loc in rm:
+            # Served by previously prefetched data — no network round trip.
+            stats_r.accesses += 1
+            stats_r.remote_prefetch_hits += 1
+            return rm.take(loc)
+
+        # Remote miss: request the owner (paper Fig. 6).
+        stats_r.remote_requests += 1
+        self._cleanup_pending(o, r, pos)
+        res = self.nodes[o].request(file_id)
+        # Owner's batched disk read happens on the owner; the response bytes
+        # travel to the requester (see stats.py for the time model).
+        io_by_node.setdefault(o, StepIO()).add(res.io)
+        io_r = io_by_node.setdefault(r, StepIO())
+        io_r.net_messages += 1
+        io_r.net_bytes += int(plan.file_sizes[res.file_id])
+        if self.prefetch:
+            self._opportunistic_prefetch(o, r, pos, io_r)
+        return res.file_id, res.data
+
+    def _cleanup_pending(self, o: int, r: int, pos: int) -> None:
+        """Drop pending entries the requester has provably consumed (< pos)."""
+        pend = self.pending[o][r]
+        if not pend:
+            return
+        positions = self._loc_positions[r]
+        done = []
+        for loc_id, sent_pos in pend.items():
+            plist = positions.get(loc_id)
+            if plist is None:
+                continue
+            nxt = np.searchsorted(plist, sent_pos, side="right")
+            if nxt < plist.size and plist[nxt] < pos:
+                done.append(loc_id)
+        for loc_id in done:
+            del pend[loc_id]
+
+    def _opportunistic_prefetch(self, o: int, r: int, pos: int, io_r: StepIO) -> None:
+        plan = self.plan
+        seq = self.sequences[r]
+        locs = self._loc_of_seq[r]
+        pend = self.pending[o][r]
+        rm = self.remote_mem[r]
+        owner_mem = self.nodes[o].memory
+        end = min(pos + 1 + self.prefetch_window, seq.size)
+        for q in range(pos + 1, end):
+            fq = int(seq[q])
+            gq = plan.group_of_file(fq)
+            if int(self.owner_of_group[gq]) != o:
+                continue
+            loc_q = int(locs[q])
+            if loc_q in pend:
+                continue  # requester slot occupied by an outstanding prefetch
+            sq = loc_q - gq * plan.chunk_size
+            file_p = owner_mem.get(gq, sq)
+            if file_p < 0:
+                continue  # opportunistic: never read disk for a prefetch
+            size = int(plan.file_sizes[file_p])
+            if size > rm.free_bytes:
+                continue  # respect the piggybacked remote-memory budget
+            _, data = self.nodes[o].take_for_prefetch(gq, sq)
+            rm.put(loc_q, file_p, data)
+            pend[loc_q] = pos
+            self.nodes[r].stats.prefetch_received += 1
+            io_r.net_bytes += size
+            self.nodes[r].stats.peak_remote_bytes = max(
+                self.nodes[r].stats.peak_remote_bytes, rm.peak_bytes
+            )
+
+    # -------------------------------------------------------------- drivers
+    def run_epoch(
+        self,
+        sampler: EpochSampler,
+        epoch: int,
+        batch_per_node: int,
+        *,
+        collect_returned: bool = True,
+    ) -> EpochResult:
+        """Execute a full epoch with per-step node interleaving (DP barrier)."""
+        seqs = self.begin_epoch(sampler, epoch)
+        steps = max(math.ceil(len(s) / batch_per_node) for s in seqs)
+        per_node_step_io: list[list[StepIO]] = [[] for _ in range(self.num_nodes)]
+        returned: list[list[int]] = [[] for _ in range(self.num_nodes)]
+        for step in range(steps):
+            io_by_node: dict[int, StepIO] = {}
+            for r in range(self.num_nodes):
+                if self.failed[r]:
+                    continue
+                seq = self.sequences[r]
+                lo, hi = step * batch_per_node, min((step + 1) * batch_per_node, seq.size)
+                for pos in range(lo, hi):
+                    f, _ = self.access(r, pos, int(seq[pos]), io_by_node)
+                    if collect_returned:
+                        returned[r].append(f)
+            for r in range(self.num_nodes):
+                per_node_step_io[r].append(io_by_node.get(r, StepIO()))
+        self._check_epoch_complete()
+        node_stats = [n.stats for n in self.nodes]
+        agg = node_stats[0]
+        for s in node_stats[1:]:
+            agg = agg.merge(s)
+        return EpochResult(
+            stats=agg,
+            node_stats=node_stats,
+            per_node_step_io=per_node_step_io,
+            returned=[np.asarray(rt, dtype=np.int64) for rt in returned],
+        )
+
+    def _check_epoch_complete(self) -> None:
+        """Every file consumed at its (current) owner; all memories drained.
+
+        Exactly-once of the *returned stream* is asserted separately by the
+        property tests (counting each file in ``EpochResult.returned``) —
+        here we check the owner-side bookkeeping, which must hold even after
+        an elastic ownership remap.
+        """
+        for r in range(self.num_nodes):
+            if self.failed[r]:
+                continue
+            assert self.nodes[r].memory.is_empty(), "local abstract memory not drained"
+            assert len(self.remote_mem[r]) == 0, "remote abstract memory not drained"
+        owner_of_file = self.owner_of_group[
+            self.plan.group_of_chunk[self.plan.chunk_of]
+        ]
+        for r in range(self.num_nodes):
+            if self.failed[r]:
+                continue
+            mask = owner_of_file == r
+            assert self.nodes[r].consumed[mask].all(), (
+                "a file was never consumed (exactly-once violated)"
+            )
+
+    # ------------------------------------------------------- fault tolerance
+    def fail_node(self, dead: int, processed_upto: int) -> None:
+        """Node ``dead`` fails after completing ``processed_upto`` accesses.
+
+        Its unprocessed sequence tail is redistributed round-robin and
+        *appended* to the survivors' sequences — appending keeps every
+        existing position stable, so outstanding prefetch bookkeeping
+        (keyed by position) remains exact; only the location index is
+        rebuilt. Ownership is then remapped (see :meth:`remap_ownership`).
+        """
+        assert self.sequences is not None, "fail_node outside an epoch"
+        tail = self.sequences[dead][processed_upto:]
+        self.sequences[dead] = self.sequences[dead][:processed_upto]
+        self.remap_ownership(dead)
+        survivors = [r for r in range(self.num_nodes) if not self.failed[r]]
+        shares = [tail[i :: len(survivors)] for i in range(len(survivors))]
+        for r, share in zip(survivors, shares):
+            self.sequences[r] = np.concatenate([self.sequences[r], share])
+        # Rebuild the per-node location indexes (positions in the unchanged
+        # prefixes are preserved, so pending[o][r] entries stay valid).
+        self._loc_of_seq = [self.plan.locations_of_files(s) for s in self.sequences]
+        self._loc_positions = [_build_loc_index(locs) for locs in self._loc_of_seq]
+
+    def remap_ownership(self, dead: int) -> None:
+        """Elastic remap after node ``dead`` fails mid-epoch (DESIGN.md §5).
+
+        Durable state (disk chunks — replicated/NAS-resident in the paper's
+        setups — and the consumption journal) survives; volatile state (the
+        node's abstract-memory residents and its un-consumed prefetches held
+        *for* it) is re-fetchable from disk precisely because never-evicted
+        residents are by definition un-consumed.
+        """
+        assert not self.failed[dead]
+        self.failed[dead] = True
+        survivors = [r for r in range(self.num_nodes) if not self.failed[r]]
+        assert survivors, "no survivors"
+        # 1. Reassign the dead node's groups round-robin to survivors.
+        dead_groups = np.nonzero(self.owner_of_group == dead)[0]
+        for i, grp in enumerate(dead_groups):
+            self.owner_of_group[grp] = survivors[i % len(survivors)]
+        # 2. Its residents are lost with its memory: un-consume nothing (they
+        #    were never consumed) and clear the slots so the new owner's
+        #    refills can re-fetch the files from the replicated store.
+        mem = self.nodes[dead].memory
+        live = np.nonzero(mem.resident.reshape(-1) >= 0)[0]
+        for flat in live:
+            g, s = divmod(int(flat), self.plan.chunk_size)
+            mem.take(g, s)
+        # 3. Migrate the consumption journal to the new owners. Our in-process
+        #    LocalNodes each hold a full-size consumed bitmap, so survivors
+        #    merge the dead node's journal directly.
+        journal = self.nodes[dead].consumed
+        for r in survivors:
+            self.nodes[r].consumed |= journal
+        # 4. Outstanding prefetches *from* the dead node already live in the
+        #    requesters' remote memories (real data — still valid). Pending
+        #    bookkeeping moves nowhere: new owners start with empty pending,
+        #    which is safe (conservative) because requesters re-miss at most
+        #    once per location.
+        for r in range(self.num_nodes):
+            merged: dict[int, int] = {}
+            merged.update(self.pending[dead][r])
+            for loc, p in merged.items():
+                g = loc // self.plan.chunk_size
+                new_o = int(self.owner_of_group[g])
+                self.pending[new_o][r][loc] = p
+            self.pending[dead][r] = {}
+        # 5. Prefetched files sitting in the dead node's *remote memory* were
+        #    journalled as consumed by their senders but never reached
+        #    training. Requesters durably journal remote consumptions too (4
+        #    bytes/file, same as the owner journal), so on recovery the
+        #    senders un-consume exactly the lost ones; survivors will then
+        #    re-fetch them from the chunk store through normal refills.
+        rm_dead = self.remote_mem[dead]
+        for loc in list(rm_dead._data):
+            f, _ = rm_dead.take(loc)
+            for r in survivors:
+                self.nodes[r].consumed[f] = False
+        for o in range(self.num_nodes):
+            self.pending[o][dead] = {}
+        # 6. Repatriation: a survivor may now *own* a location for which it
+        #    holds a prefetched file in its remote memory (the prefetch came
+        #    from the dead ex-owner). The owner path never consults remote
+        #    memory, so convert such entries back into ordinary residents of
+        #    the new owner's local abstract memory (un-consuming them — a
+        #    resident is by definition un-consumed).
+        c = self.plan.chunk_size
+        for r in survivors:
+            rm_r = self.remote_mem[r]
+            self_locs = [
+                loc for loc in rm_r._data
+                if int(self.owner_of_group[loc // c]) == r
+            ]
+            for loc in self_locs:
+                f, data = rm_r.take(loc)
+                for r2 in survivors:
+                    self.nodes[r2].consumed[f] = False
+                gq, sq = divmod(loc, c)
+                self.nodes[r].memory.fill(gq, sq, f)
+                if data is not None:
+                    self.nodes[r].buffer[f] = data
+                self.pending[r][r].pop(loc, None)

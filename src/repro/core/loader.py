@@ -1,0 +1,136 @@
+"""RedoxLoader: the bridge from the redirection protocol to JAX training.
+
+This replaces the DL framework's *data fetcher* exactly as the paper does
+for PyTorch (§4.2): the framework still generates its random per-epoch
+sequence; the loader walks it, but every index is served through the Redox
+protocol, so the batch contains *redirected* (still uniformly random,
+exactly-once) records.
+
+Batches are fixed-shape ``(batch, seq_len)`` int32 token grids with a loss
+mask (documents are clipped/padded — standard LM practice), so the jitted
+train step never recompiles.
+
+Straggler mitigation (DESIGN.md §5): an optional background prefetch queue
+(`queue_depth`) assembles batches ahead of consumption on a worker thread —
+a slow chunk read or remote round trip only stalls training once the queue
+drains, mirroring the paper's client/server split where clients hide server
+latency.
+"""
+
+from __future__ import annotations
+
+import math
+import queue
+import threading
+
+import numpy as np
+
+from ..data.tokens import decode_record
+from .distributed import Cluster
+from .sampler import EpochSampler
+from .stats import StepIO
+
+__all__ = ["RedoxLoader", "GlobalBatch"]
+
+
+class GlobalBatch(dict):
+    """dict with tokens/targets/loss_mask ndarrays (converted by the step fn)."""
+
+
+def _to_grid(records: list[np.ndarray], seq_len: int, pad_id: int):
+    """Clip/pad variable-length documents into a fixed (B, S) grid + mask."""
+    b = len(records)
+    tokens = np.full((b, seq_len), pad_id, dtype=np.int32)
+    mask = np.zeros((b, seq_len), dtype=np.float32)
+    for i, rec in enumerate(records):
+        n = min(rec.shape[0], seq_len)
+        tokens[i, :n] = rec[:n]
+        mask[i, :n] = 1.0
+    return tokens, mask
+
+
+class RedoxLoader:
+    """Iterator over global batches served by a (possibly 1-node) cluster."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        sampler: EpochSampler,
+        *,
+        batch_per_node: int,
+        seq_len: int,
+        pad_id: int = 0,
+        queue_depth: int = 2,
+    ):
+        assert cluster.num_nodes == sampler.num_nodes
+        self.cluster = cluster
+        self.sampler = sampler
+        self.batch_per_node = batch_per_node
+        self.seq_len = seq_len
+        self.pad_id = pad_id
+        self.queue_depth = queue_depth
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        n = min(len(s) for s in self.sampler.node_sequences(epoch))
+        return n // self.batch_per_node
+
+    # ------------------------------------------------------------- epochs
+    def epoch(self, epoch: int):
+        """Yield GlobalBatch objects; runs protocol inline (deterministic)."""
+        yield from self._produce(epoch)
+
+    def epoch_async(self, epoch: int):
+        """Same batches, assembled ahead of time on a worker thread."""
+        q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
+        stop = object()
+
+        def worker():
+            try:
+                for item in self._produce(epoch):
+                    q.put(item)
+            finally:
+                q.put(stop)
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item
+        t.join()
+
+    # ------------------------------------------------------------ internals
+    def _produce(self, epoch: int):
+        cluster, sampler = self.cluster, self.sampler
+        seqs = cluster.begin_epoch(sampler, epoch)
+        num_nodes = cluster.num_nodes
+        steps = min(len(s) for s in seqs) // self.batch_per_node
+        for step in range(steps):
+            io_by_node: dict[int, StepIO] = {}
+            per_node: list[list[np.ndarray]] = []
+            for r in range(num_nodes):
+                recs = []
+                lo = step * self.batch_per_node
+                for pos in range(lo, lo + self.batch_per_node):
+                    fid, data = cluster.access(r, pos, int(seqs[r][pos]), io_by_node)
+                    assert data is not None, (
+                        "RedoxLoader requires a Cluster built with a ChunkStore"
+                    )
+                    recs.append(decode_record(data))
+                per_node.append(recs)
+            flat = [rec for recs in per_node for rec in recs]
+            tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
+            yield GlobalBatch(
+                tokens=tokens[:, :-1],
+                targets=tokens[:, 1:],
+                loss_mask=mask[:, 1:],
+                step=step,
+                io_by_node=io_by_node,
+            )
+        # Drain the ragged tail so the exactly-once epoch invariants hold.
+        io_by_node = {}
+        for r in range(num_nodes):
+            for pos in range(steps * self.batch_per_node, len(seqs[r])):
+                cluster.access(r, pos, int(seqs[r][pos]), io_by_node)
+        cluster._check_epoch_complete()

@@ -1,0 +1,134 @@
+"""Counters and the epoch-time pipeline model.
+
+The protocol itself is deterministic given its RNG, so every quantity the
+paper reports (Table 4/5, Fig. 12-14) is either an exact counter collected
+here or a time derived from the counters through
+:class:`PipelineTimeModel` (documented below, calibration in DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["NodeStats", "PipelineTimeModel", "StepIO"]
+
+
+@dataclasses.dataclass
+class NodeStats:
+    """Exact per-node protocol counters for one epoch."""
+
+    accesses: int = 0
+    local_hits: int = 0            # served by a valid local abstract slot
+    memory_misses: int = 0         # slot empty -> a chunk load was required
+    chunk_loads: int = 0           # batched disk reads issued
+    remote_requests: int = 0       # on-demand requests sent to an owner
+    remote_prefetch_hits: int = 0  # served from the remote abstract memory
+    prefetch_sent: int = 0         # files this node shipped as prefetch
+    prefetch_received: int = 0
+
+    disk_bytes: int = 0            # total bytes batched in from storage
+    filled_bytes: int = 0          # bytes of those that landed in a slot
+    wasted_bytes: int = 0          # disk_bytes - filled_bytes (paper fill_rate waste)
+    net_bytes: int = 0             # on-demand + prefetch payload bytes
+    net_messages: int = 0
+
+    fill_rate_num: float = 0.0     # sum of fill_rate over chunk loads
+    peak_local_bytes: int = 0
+    peak_remote_bytes: int = 0
+
+    @property
+    def mean_fill_rate(self) -> float:
+        return self.fill_rate_num / self.chunk_loads if self.chunk_loads else 1.0
+
+    def merge(self, other: "NodeStats") -> "NodeStats":
+        out = NodeStats()
+        for f in dataclasses.fields(NodeStats):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if f.name.startswith("peak"):
+                setattr(out, f.name, max(a, b))
+            else:
+                setattr(out, f.name, a + b)
+        return out
+
+
+@dataclasses.dataclass
+class StepIO:
+    """Per-training-step I/O demand of one node (input to the time model)."""
+
+    chunk_loads: int = 0
+    disk_bytes: int = 0
+    file_reads: int = 0   # per-file reads (baselines only; Redox never does these)
+    net_messages: int = 0
+    net_bytes: int = 0
+
+    def add(self, other: "StepIO") -> None:
+        self.chunk_loads += other.chunk_loads
+        self.disk_bytes += other.disk_bytes
+        self.file_reads += other.file_reads
+        self.net_messages += other.net_messages
+        self.net_bytes += other.net_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTimeModel:
+    """Double-buffered loader model.
+
+    Every DL framework under test (PyTorch DataLoader with workers, CoorDL,
+    Redox clients) overlaps data loading with compute, so the wall time of a
+    step is ``max(compute, io)`` and epoch time is the per-step sum, maxed
+    over nodes (data-parallel barrier at each step). I/O time of a step is
+
+        io = file_reads * file_overhead + chunk_loads * chunk_overhead
+           + disk_bytes / disk_bw + net_messages * net_latency
+           + net_bytes / net_bw
+
+    ``file_overhead`` is the per-small-file cost (metadata + head positioning
+    on NAS) that batching amortises — the mechanism behind the paper's Fig. 13
+    I/O-throughput gains. Calibration to the paper's Table 2 setups lives in
+    ``benchmarks/calibration.py``.
+    """
+
+    disk_bw: float          # bytes/s sequential
+    file_overhead: float    # s per individual small-file read
+    chunk_overhead: float   # s per batched chunk read
+    net_bw: float           # bytes/s
+    net_latency: float      # s per message
+
+    def io_time(self, io: StepIO) -> float:
+        return (
+            io.file_reads * self.file_overhead
+            + io.chunk_loads * self.chunk_overhead
+            + io.disk_bytes / self.disk_bw
+            + io.net_messages * self.net_latency
+            + io.net_bytes / self.net_bw
+        )
+
+    def epoch_time(
+        self, per_node_step_io: list[list[StepIO]], compute_per_step: float
+    ) -> float:
+        """Pipelined bound: ``max_node (max(Σcompute, Σio) + pipeline fill)``.
+
+        Loaders run ahead through a prefetch queue, so bursty chunk loads
+        (which cluster at epoch start, when the abstract memory is empty)
+        are smoothed across the epoch; only the first batch's I/O sits on
+        the critical path. This matches the paper's own observation that
+        Brand reaches No-I/O time for compute-heavy models (Fig. 10d). The
+        strict no-queue model is kept as :meth:`epoch_time_strict`.
+        """
+        worst = 0.0
+        for steps in per_node_step_io:
+            total_io = sum(self.io_time(s) for s in steps)
+            fill = self.io_time(steps[0]) if steps else 0.0
+            t = max(compute_per_step * len(steps), total_io) + fill
+            worst = max(worst, t)
+        return worst
+
+    def epoch_time_strict(
+        self, per_node_step_io: list[list[StepIO]], compute_per_step: float
+    ) -> float:
+        """``max_node Σ_step max(compute, io_step)`` — no prefetch queue."""
+        worst = 0.0
+        for steps in per_node_step_io:
+            t = sum(max(compute_per_step, self.io_time(s)) for s in steps)
+            worst = max(worst, t)
+        return worst

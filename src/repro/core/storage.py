@@ -1,0 +1,98 @@
+"""Chunk store: the on-disk batched layout (paper §3.2 "Data Chunk Generation").
+
+A chunk is one file on disk: the concatenation of its member records, plus a
+sidecar offset index. This is the paper's one-time dataset re-organisation
+("the pre-organized data chunks can be re-used to train different models").
+Reads happen at two granularities:
+
+* ``read_chunk``  — one sequential read of the whole chunk (Redox path);
+* ``read_file``   — a seek + ranged read of one record (baseline path —
+  models PyTorch's per-file access against the same bytes).
+
+The store is deliberately VFS-only (plain ``open``/``seek``/``read``), like
+the paper's implementation: "it does not depend on any specific storage".
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .chunking import ChunkingPlan
+
+__all__ = ["ChunkStore"]
+
+
+class ChunkStore:
+    """Directory of chunk files + offset indexes for one dataset."""
+
+    def __init__(self, root: str | Path, plan: ChunkingPlan):
+        self.root = Path(root)
+        self.plan = plan
+        self._offsets: dict[int, np.ndarray] | None = None
+
+    # -------------------------------------------------------------- writing
+    @staticmethod
+    def build(
+        root: str | Path,
+        plan: ChunkingPlan,
+        records: "list[bytes] | RecordProvider",
+    ) -> "ChunkStore":
+        """One-time chunk-file generation (paper Fig. 2a)."""
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        offsets = {}
+        for k in range(plan.num_chunks):
+            files = plan.files_in_chunk(k)
+            blobs = [records[int(f)] for f in files]
+            sizes = np.array([len(b) for b in blobs], dtype=np.int64)
+            if not np.array_equal(sizes, plan.file_sizes[files]):
+                raise ValueError(f"record sizes disagree with plan for chunk {k}")
+            offs = np.zeros(len(blobs) + 1, dtype=np.int64)
+            np.cumsum(sizes, out=offs[1:])
+            with open(root / f"chunk_{k:08d}.bin", "wb") as fh:
+                for b in blobs:
+                    fh.write(b)
+            offsets[k] = offs
+        index = {
+            str(k): [int(x) for x in offs] for k, offs in offsets.items()
+        }
+        (root / "index.json").write_text(json.dumps(index))
+        plan.save(root / "plan.npz")
+        store = ChunkStore(root, plan)
+        store._offsets = {int(k): np.asarray(v) for k, v in index.items()}
+        return store
+
+    # -------------------------------------------------------------- reading
+    def _index(self) -> dict[int, np.ndarray]:
+        if self._offsets is None:
+            raw = json.loads((self.root / "index.json").read_text())
+            self._offsets = {int(k): np.asarray(v, dtype=np.int64) for k, v in raw.items()}
+        return self._offsets
+
+    def read_chunk(self, chunk: int) -> list[tuple[int, bytes]]:
+        """One batched read -> [(file_id, record_bytes), ...] in slot order."""
+        offs = self._index()[chunk]
+        files = self.plan.files_in_chunk(chunk)
+        with open(self.root / f"chunk_{chunk:08d}.bin", "rb") as fh:
+            blob = fh.read()
+        return [
+            (int(f), blob[offs[j] : offs[j + 1]]) for j, f in enumerate(files)
+        ]
+
+    def read_file(self, file_id: int) -> bytes:
+        """Seek + ranged read of a single record (baseline access pattern)."""
+        k = int(self.plan.chunk_of[file_id])
+        j = int(self.plan.slot_of[file_id])
+        offs = self._index()[k]
+        with open(self.root / f"chunk_{k:08d}.bin", "rb") as fh:
+            fh.seek(int(offs[j]))
+            return fh.read(int(offs[j + 1] - offs[j]))
+
+    @staticmethod
+    def open(root: str | Path) -> "ChunkStore":
+        root = Path(root)
+        plan = ChunkingPlan.load(root / "plan.npz")
+        return ChunkStore(root, plan)

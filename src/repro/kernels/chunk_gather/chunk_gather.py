@@ -1,0 +1,78 @@
+"""chunk_gather: device-side redirected batch assembly (the paper's
+technique as a Pallas kernel; DESIGN.md §2 "Where a Pallas kernel is
+warranted").
+
+Redox's host protocol batches whole chunks into memory and *redirects* each
+framework request to whatever record currently occupies the target slot.
+On TPU the analogous hot loop is assembling the device batch: a chunk
+buffer lands in HBM as one contiguous DMA (the batched read), and the
+per-step redirection table picks `B` variable-length records to form the
+padded (B, L) token grid + loss mask.
+
+The kernel streams one output row per grid step: the redirection index is
+a scalar-prefetch operand (known before the body runs), so the BlockSpec
+index_map selects which chunk-slot row to DMA into VMEM — the gather
+happens in the *data movement*, not in compute. Lengths produce the mask.
+
+Layout notes for real TPUs: records are padded to the (8,128)-tile lane
+width by the host packer; the slot row arrives VMEM-resident; the scalar
+table lives in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["chunk_gather"]
+
+
+def _kernel(idx_ref, len_ref, chunk_ref, tok_ref, mask_ref, *, pad_id):
+    # chunk_ref block == the slot row selected by the index_map via the
+    # scalar-prefetched redirection table; body only pads + masks.
+    row = chunk_ref[0]  # (L,)
+    i = pl.program_id(0)
+    n = len_ref[idx_ref[i]]
+    pos = jax.lax.broadcasted_iota(jnp.int32, row.shape, 0)
+    valid = pos < n
+    tok_ref[0] = jnp.where(valid, row, pad_id)
+    mask_ref[0] = valid.astype(mask_ref.dtype)
+
+
+def chunk_gather(
+    chunk_tokens: jax.Array,  # (num_slots, L) int32, slot-padded records
+    record_lens: jax.Array,   # (num_slots,) int32
+    indices: jax.Array,       # (B,) int32 — the redirection table
+    *,
+    pad_id: int = 0,
+    interpret: bool = True,
+):
+    """Returns (tokens (B, L) int32, mask (B, L) float32)."""
+    num_slots, l = chunk_tokens.shape
+    b = indices.shape[0]
+    kernel = functools.partial(_kernel, pad_id=pad_id)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # indices, record_lens
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i, idx, lens: (idx[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l), lambda i, idx, lens: (i, 0)),
+            pl.BlockSpec((1, l), lambda i, idx, lens: (i, 0)),
+        ],
+    )
+    tokens, mask = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l), jnp.int32),
+            jax.ShapeDtypeStruct((b, l), jnp.float32),
+        ],
+        interpret=interpret,
+    )(indices, record_lens, chunk_tokens)
+    return tokens, mask

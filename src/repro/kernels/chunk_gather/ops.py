@@ -1,0 +1,18 @@
+"""Jit'd wrapper for chunk_gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .chunk_gather import chunk_gather as _kernel_call
+
+__all__ = ["chunk_gather"]
+
+
+@functools.partial(jax.jit, static_argnames=("pad_id", "interpret"))
+def chunk_gather(chunk_tokens, record_lens, indices, *, pad_id=0, interpret=True):
+    return _kernel_call(
+        chunk_tokens, record_lens, indices, pad_id=pad_id, interpret=interpret
+    )

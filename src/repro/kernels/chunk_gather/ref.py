@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for chunk_gather."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["chunk_gather_ref"]
+
+
+def chunk_gather_ref(chunk_tokens, record_lens, indices, *, pad_id=0):
+    rows = chunk_tokens[indices]                   # (B, L)
+    lens = record_lens[indices]                    # (B,)
+    pos = jnp.arange(chunk_tokens.shape[1])[None, :]
+    valid = pos < lens[:, None]
+    return jnp.where(valid, rows, pad_id), valid.astype(jnp.float32)

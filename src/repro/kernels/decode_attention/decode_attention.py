@@ -1,0 +1,93 @@
+"""GQA decode attention, Pallas/TPU — flash-decoding-style split-K
+[FlashDecoding, arXiv:2311.01282-adjacent], TPU grid adaptation.
+
+One query token attends to a long KV cache. The grid is
+(batch · kv_head, kv_block); the kv_block axis is minor-most, hence
+sequential on TPU, so the online-softmax state for the q-head *group* of
+this kv head persists in VMEM scratch across kv blocks (the TPU analogue of
+CUDA split-K + cross-SM reduction). Cache validity (rotating-window buffers
+included) arrives as a precomputed boolean mask, so ring layouts need no
+special-casing in-kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, *, sm_scale, kv_blocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]          # (G, D) — the q-head group of this kv head
+    k = k_ref[0]          # (bk, D)
+    v = v_ref[0]
+    valid = mask_ref[0]   # (bk,)
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * sm_scale  # (G, bk)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(p.astype(v.dtype), v).astype(
+        jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention_fwd(
+    q: jax.Array,      # (B*KVH, G, D) one token's queries, grouped by kv head
+    k: jax.Array,      # (B*KVH, S, D) cache keys
+    v: jax.Array,      # (B*KVH, S, D)
+    mask: jax.Array,   # (B*KVH, S) bool — slot validity (handles ring buffers)
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    bkv, g, d = q.shape
+    s = k.shape[1]
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    nk = s // block_k
+    kernel = functools.partial(_kernel, sm_scale=1.0 / math.sqrt(d), kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

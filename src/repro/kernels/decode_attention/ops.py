@@ -1,0 +1,30 @@
+"""Jit'd wrapper: model-layout (B,1,H,D) decode -> kernel layout and back."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_fwd
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, cache_k, cache_v, mask, *, block_k=512, interpret=True):
+    """q: (B, H, D); cache_k/v: (B, S, KVH, D); mask: (B, S) bool.
+
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    s, kvh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d).reshape(b * kvh, g, d)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+    m = jnp.repeat(mask[:, None, :], kvh, axis=1).reshape(b * kvh, s)
+    out = decode_attention_fwd(
+        qg, fold(cache_k), fold(cache_v), m, block_k=block_k, interpret=interpret
+    )
+    return out.reshape(b, kvh, g, d).reshape(b, h, d)

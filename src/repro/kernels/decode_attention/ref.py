@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for decode_attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(q, k, v, mask):
+    """q: (BKV, G, D); k/v: (BKV, S, D); mask: (BKV, S) bool."""
+    d = q.shape[-1]
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (d**-0.5)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :], p, 0.0)
+    return jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32)).astype(q.dtype)

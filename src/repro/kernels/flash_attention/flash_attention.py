@@ -1,0 +1,115 @@
+"""Flash attention forward, Pallas/TPU (FlashAttention [arXiv:2205.14135],
+adapted to the TPU grid model).
+
+TPU adaptation (DESIGN.md §2): instead of CUDA thread-block tiling, the
+kernel exploits the *sequential minor-most grid dimension* on TPU — the
+(batch·head, q_block, kv_block) grid runs kv_blocks in order, so the online
+-softmax running state (m, l, acc) lives in VMEM scratch that persists
+across kv steps; the output block is written once, on the last kv step.
+Block shapes are MXU-aligned (q/kv blocks multiples of 128 on real shapes;
+tests sweep smaller shapes in interpret mode).
+
+GQA is handled OUTSIDE the kernel (k/v are pre-expanded per q-head group by
+ops.py — on real TPUs one would instead loop q-head groups per kv head to
+avoid the HBM expansion; noted as a further optimization).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal, window, sm_scale, kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]
+    bq, d = q.shape
+    bk = k.shape[0]
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * sm_scale  # (bq, bk)
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)  # guard fully-masked rows (window)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v
+    ).astype(jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, S, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    sm_scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, sm_scale=sm_scale, kv_blocks=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),      # l: running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc: running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the flash-attention kernel (GQA layout)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_gqa"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
+                    interpret=True):
+    """(BH, S, D) attention via the Pallas kernel."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, window=0, **kw):
+    """(B, S, H, D) x (B, S, KVH, D) GQA convenience wrapper."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = flash_attention(fold(q), fold(k), fold(v), causal=causal, window=window, **kw)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash_attention (naive full-matrix attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q/k/v: (BH, S, D). fp32 softmax, output in q.dtype."""
+    bh, s, d = q.shape
+    scale = d**-0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (window) produce uniform probs; zero them like the kernel
+    any_valid = mask.any(axis=1)[None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ssd_scan import ssd_scan_fwd
+
+__all__ = ["ssd_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=True):
+    return ssd_scan_fwd(x, dt, a, b, c, chunk=chunk, interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for ssd_scan: the naive sequential SSM recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x, dt, a, b, c):
+    """x: (BH, S, P); dt: (BH, S); a: (BH, 1); b/c: (BH, S, N).
+
+    h_t = exp(a*dt_t) h_{t-1} + dt_t * x_t b_t^T ;  y_t = h_t c_t
+    """
+    def per_bh(xb, dtb, ab, bb, cb):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = h * jnp.exp(ab[0] * dtt) + dtt * jnp.outer(xt, bt)
+            return h, h @ ct
+
+        p, n = xb.shape[-1], bb.shape[-1]
+        h0 = jnp.zeros((p, n), jnp.float32)
+        _, ys = jax.lax.scan(
+            step, h0,
+            (xb.astype(jnp.float32), dtb.astype(jnp.float32),
+             bb.astype(jnp.float32), cb.astype(jnp.float32)),
+        )
+        return ys
+
+    return jax.vmap(per_bh)(x, dt, a, b, c).astype(x.dtype)

@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before ANY other import (jax locks the
+# device count on first init). Everything below may import jax.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..configs import SHAPES, list_archs  # noqa: E402
+from .dryrun_lib import run_cell  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+"""Multi-pod dry-run driver (assignment deliverable (e)).
+
+For every live (arch × shape) cell, lower + compile the appropriate step on
+the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, print
+memory_analysis / cost_analysis, and append a JSON record per cell to the
+artifact file (incremental: already-recorded cells are skipped, so the
+sweep is restartable).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only
+"""
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument(
+        "--optimized", action="store_true",
+        help="use the §Perf-optimized per-arch configs instead of the "
+             "paper-faithful baseline recipe",
+    )
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dryrun requires 512 emulated devices"
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if out_path.exists():
+        for line in out_path.read_text().splitlines():
+            r = json.loads(line)
+            done.add((r["arch"], r["shape"], r["mesh"]))
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(make_production_mesh(multi_pod=False))
+    if not args.single_pod_only:
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    failures = 0
+    with open(out_path, "a") as fh:
+        for mesh in meshes:
+            for arch in archs:
+                for shape in shapes:
+                    mesh_name = "x".join(f"{k}{v}" for k, v in mesh.shape.items())
+                    key = (arch, shape, mesh_name)
+                    if key in done:
+                        continue
+                    if args.optimized:
+                        from .dryrun_lib import optimized_run_cfg
+
+                        rc, cfg_ov = optimized_run_cfg(arch)
+                        res = run_cell(arch, shape, mesh, run_cfg=rc, cfg_override=cfg_ov)
+                    else:
+                        res = run_cell(arch, shape, mesh)
+                    rec = res.to_json()
+                    fh.write(json.dumps(rec) + "\n")
+                    fh.flush()
+                    tag = res.status if res.status != "ok" else (
+                        f"ok  {res.compile_s:6.1f}s  flops/dev={res.flops_per_device:.3e}"
+                        f"  coll/dev={res.collectives['total_bytes']:.3e}B"
+                        f"  temp/dev={res.memory['temp_size_in_bytes']/1e9:.2f}GB"
+                    )
+                    print(f"[{mesh_name}] {arch} × {shape}: {tag}", flush=True)
+                    if res.status == "FAILED":
+                        failures += 1
+                        print("   ", res.error[:500], flush=True)
+    print(f"dry-run complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and dummy inputs per (arch, shape).
+
+The dry-run lowers against these; smoke tests materialise the dummy
+variants. For ``vlm`` the sequence is [patch positions | text]; for
+``frame`` (audio) every position is a frame embedding and targets are the
+masked-unit labels (HuBERT objective).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["train_input_specs", "decode_input_specs", "dummy_train_inputs", "dummy_tokens"]
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Specs for train/prefill (full-sequence) steps."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "patch":
+        p = cfg.frontend_len
+        assert p < s, (p, s)
+        return {
+            "tokens": sds((b, s - p), _I32),
+            "patch_embeds": sds((b, p, cfg.frontend_dim), jnp.bfloat16),
+            "targets": sds((b, s), _I32),
+            "loss_mask": sds((b, s), _F32),
+        }
+    if cfg.frontend == "frame":
+        return {
+            "frames": sds((b, s, cfg.frontend_dim), jnp.bfloat16),
+            "targets": sds((b, s), _I32),
+            "loss_mask": sds((b, s), _F32),
+        }
+    return {
+        "tokens": sds((b, s), _I32),
+        "targets": sds((b, s), _I32),
+        "loss_mask": sds((b, s), _F32),
+    }
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), _I32),
+        "cache_pos": jax.ShapeDtypeStruct((), _I32),
+    }
+
+
+def dummy_tokens(rng: np.random.Generator, b: int, s: int, vocab: int) -> np.ndarray:
+    return rng.integers(0, vocab, (b, s)).astype(np.int32)
+
+
+def dummy_train_inputs(cfg: ModelConfig, b: int, s: int, seed: int = 0) -> dict:
+    """Materialised random inputs matching train_input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "patch":
+        p = cfg.frontend_len
+        return {
+            "tokens": jnp.asarray(dummy_tokens(rng, b, s - p, cfg.vocab_size)),
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(b, p, cfg.frontend_dim)), cfg.compute_dtype
+            ),
+            "targets": jnp.asarray(dummy_tokens(rng, b, s, cfg.vocab_size)),
+            "loss_mask": jnp.asarray(
+                np.concatenate(
+                    [np.zeros((b, p), np.float32), np.ones((b, s - p), np.float32)], 1
+                )
+            ),
+        }
+    if cfg.frontend == "frame":
+        mask = (rng.random((b, s)) < 0.08).astype(np.float32)  # HuBERT-style 8%
+        return {
+            "frames": jnp.asarray(
+                rng.normal(size=(b, s, cfg.frontend_dim)), cfg.compute_dtype
+            ),
+            "targets": jnp.asarray(dummy_tokens(rng, b, s, cfg.vocab_size)),
+            "loss_mask": jnp.asarray(mask),
+        }
+    toks = dummy_tokens(rng, b, s + 1, cfg.vocab_size)
+    return {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "targets": jnp.asarray(toks[:, 1:]),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }

@@ -1,0 +1,4 @@
+from .common import Param, RngStream, merge_params, split_params
+from .transformer import Model, build_model
+
+__all__ = ["Model", "Param", "RngStream", "build_model", "merge_params", "split_params"]

@@ -1,0 +1,121 @@
+"""Shared model machinery: params with logical axes, norms, RoPE, init."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Param",
+    "split_params",
+    "merge_params",
+    "RngStream",
+    "rms_norm",
+    "make_rope",
+    "apply_rope",
+    "normal_init",
+    "scaled_init",
+]
+
+
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf: value + logical axis names (one per dim).
+
+    Registered as a pytree node (value = child, axes = static aux data) so
+    ``jax.eval_shape`` can trace ``Model.init`` at full scale without ever
+    allocating parameters — that's how the 1T-param dry-run stays lazy.
+    """
+
+    value: jax.Array
+    axes: tuple[str | None, ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.value.shape), (self.axes, self.value.shape)
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (values tree, axes tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def merge_params(values, axes):
+    return jax.tree.map(Param, values, axes, is_leaf=lambda x: x is None)
+
+
+class RngStream:
+    """Deterministic rng splitter: stream.next() never reuses a key."""
+
+    def __init__(self, seed_or_key):
+        self._key = (
+            seed_or_key
+            if isinstance(seed_or_key, jax.Array)
+            else jax.random.PRNGKey(seed_or_key)
+        )
+
+    def next(self) -> jax.Array:
+        self._key, out = jax.random.split(self._key)
+        return out
+
+
+def normal_init(rng, shape, dtype, stddev=0.02):
+    return (jax.random.normal(rng, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def scaled_init(rng, shape, dtype, fan_in=None):
+    """Truncated-normal-ish fan-in scaled init (1/sqrt(fan_in))."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (
+        jax.random.normal(rng, shape, jnp.float32) / math.sqrt(max(fan_in, 1))
+    ).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32, result cast back to x.dtype (LLaMA convention)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def make_rope(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) tables for the given positions; fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x2 cos + x1 sin).
+
+    x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads.
+    Odd head_dims leave the last lane unrotated (kimi's 112 stays exact).
+    """
+    half = sin.shape[-1]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    x1 = x[..., :half]
+    x2 = x[..., half : 2 * half]
+    rest = x[..., 2 * half :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2] + ([rest] if rest.shape[-1] else []), axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD) block [arXiv:2405.21060], chunked-scan formulation.
+
+State-space duality form: per head h with state size n,
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t x_tᵀ        (n × p state)
+    y_t = C_tᵀ h_t + D · x_t
+with scalar A < 0 per head, data-dependent dt, and shared B/C across heads
+(n_groups = 1, as in zamba2-1.2b). Training/prefill uses the chunked
+algorithm: quadratic attention-like intra-chunk term + a lax.scan over
+chunk states (O(S·n·p) memory); decode is the O(1) recurrence.
+
+This pure-jnp implementation is the oracle for ``kernels/ssd_scan``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.axes import shard
+from .common import Param, normal_init, scaled_init
+
+__all__ = ["init_mamba2", "mamba2_block", "mamba2_decode", "mamba2_state_shape"]
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    p = cfg.ssm_head_dim
+    heads = di // p
+    n = cfg.ssm_state
+    return di, p, heads, n
+
+
+def init_mamba2(rng, cfg, dtype):
+    d = cfg.d_model
+    di, p, heads, n = _dims(cfg)
+    conv_dim = di + 2 * n  # conv over x, B, C
+    return {
+        "in_proj": Param(
+            scaled_init(rng.next(), (d, 2 * di + 2 * n + heads), dtype),
+            ("embed", "inner_flat"),
+        ),
+        "conv_w": Param(
+            normal_init(rng.next(), (cfg.ssm_conv, conv_dim), dtype, 0.1),
+            (None, "inner_flat"),
+        ),
+        "conv_b": Param(jnp.zeros((conv_dim,), dtype), ("inner_flat",)),
+        "A_log": Param(
+            jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(dtype), ("heads",)
+        ),
+        "dt_bias": Param(jnp.zeros((heads,), dtype), ("heads",)),
+        "D": Param(jnp.ones((heads,), dtype), ("heads",)),
+        "out_proj": Param(
+            scaled_init(rng.next(), (di, d), dtype, fan_in=di), ("inner_flat", "embed")
+        ),
+    }
+
+
+def mamba2_state_shape(cfg, batch):
+    di, p, heads, n = _dims(cfg)
+    return {
+        "ssm": (batch, heads, p, n),
+        "conv": (batch, cfg.ssm_conv - 1, di + 2 * n),
+    }
+
+
+def _split_proj(z_all, cfg):
+    di, p, heads, n = _dims(cfg)
+    z, rest = z_all[..., :di], z_all[..., di:]
+    xbc, dt = rest[..., : di + 2 * n], rest[..., di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, init_state=None):
+    """Depthwise causal conv1d; returns (out, trailing context)."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+k-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), xp[:, -(k - 1) :] if k > 1 else pad[:, :0]
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk, ssm_init=None):
+    """Chunked SSD scan.
+
+    xh: (b, s, h, p) head inputs; dt: (b, s, h) positive step sizes;
+    A: (h,) negative decay rates; B, C: (b, s, n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    la = dt * A[None, None, :]  # log decay per step (b, s, h) (negative)
+
+    xc = xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    lac = la.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        """One chunk: intra-chunk quadratic term + inter-chunk state term.
+
+        Sequential lax.scan keeps the (q,k,h) decay tensor at one-chunk size
+        — the same working-set shape the Pallas ssd_scan kernel tiles into
+        VMEM (a vectorised all-chunks version would materialise (nc,q,k,h)).
+        """
+        xcc, dcc, lcc, Bcc, Ccc = inp
+        seg = jnp.cumsum(lcc, axis=1)       # (b, chunk, h) inclusive log-decay
+        total = seg[:, -1]                  # (b, h)
+        # intra: L[i,j] = exp(seg_i - seg_j), i >= j (decay over j+1..i)
+        li = seg[:, :, None, :]
+        lj = seg[:, None, :, :]
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], li - lj, -jnp.inf))
+        cb = jnp.einsum("bqn,bkn->bqk", Ccc, Bcc)
+        y = jnp.einsum("bqk,bqkh,bkh,bkhp->bqhp", cb, decay, dcc, xcc)
+        # inter: contribution of the state entering this chunk
+        y = y + jnp.einsum("bqn,bqh,bhpn->bqhp", Ccc, jnp.exp(seg), carry)
+        # state update: S = S*exp(total) + sum_j exp(total - seg_j) dt_j B_j x_j^T
+        wdec = jnp.exp(total[:, None, :] - seg) * dcc   # (b, k, h)
+        st = jnp.einsum("bkh,bkn,bkhp->bhpn", wdec, Bcc, xcc)
+        new = carry * jnp.exp(total)[:, :, None, None] + st
+        return new, y
+
+    init = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if ssm_init is None
+        else ssm_init.astype(jnp.float32)
+    )
+    final, ys = jax.lax.scan(step, init, (xc, dtc, lac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(p_, x, cfg, *, init_state=None, chunk=None):
+    """x: (B,S,d) -> (y, {"ssm","conv"} final state)."""
+    chunk = chunk or cfg.ssm_chunk
+    b, s, d = x.shape
+    di, ph, heads, n = _dims(cfg)
+    z_all = jnp.einsum("bsd,de->bse", x, p_["in_proj"])
+    z, xbc, dt = _split_proj(z_all, cfg)
+    conv_init = None if init_state is None else init_state["conv"]
+    xbc, conv_state = _causal_conv(xbc, p_["conv_w"], p_["conv_b"], conv_init)
+    xin, B, C = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p_["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, s, heads, ph)
+    xh = shard(xh, "batch", None, "inner_heads", None)
+    ssm_init = None if init_state is None else init_state["ssm"]
+    chunk = min(chunk, s)
+    y, final = _ssd_chunked(
+        xh.astype(jnp.float32), dt, A, B.astype(jnp.float32), C.astype(jnp.float32),
+        chunk, ssm_init,
+    )
+    y = y + xh.astype(jnp.float32) * p_["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p_["out_proj"])
+    state = {"ssm": final, "conv": conv_state}
+    return out, state
+
+
+def mamba2_decode(p_, x, state, cfg):
+    """One-token recurrence. x: (B,1,d); state from mamba2_state_shape."""
+    b = x.shape[0]
+    di, ph, heads, n = _dims(cfg)
+    z_all = jnp.einsum("bsd,de->bse", x, p_["in_proj"])
+    z, xbc, dt = _split_proj(z_all, cfg)
+    # conv: shift register
+    ctx = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, k, C)
+    w, bb = p_["conv_w"], p_["conv_b"]
+    k = w.shape[0]
+    out = sum(ctx[:, i] * w[i] for i in range(k)) + bb
+    xbc = jax.nn.silu(out)[:, None]
+    new_conv = ctx[:, 1:]
+    xin, B, C = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p_["A_log"].astype(jnp.float32))
+    xh = xin.reshape(b, 1, heads, ph).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0] * A[None, :])  # (b, h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B[:, 0].astype(jnp.float32), xh[:, 0])
+    new_ssm = state["ssm"].astype(jnp.float32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), new_ssm)
+    y = y + xh[:, 0] * p_["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p_["out_proj"])
+    return out, {"ssm": new_ssm, "conv": new_conv}

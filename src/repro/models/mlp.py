@@ -1,0 +1,28 @@
+"""SwiGLU MLP (LLaMA-style gated feed-forward)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.axes import shard
+from .common import Param, scaled_init
+
+__all__ = ["init_mlp", "mlp_block"]
+
+
+def init_mlp(rng, cfg, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "wi_gate": Param(scaled_init(rng.next(), (d, f), dtype), ("embed", "mlp")),
+        "wi_up": Param(scaled_init(rng.next(), (d, f), dtype), ("embed", "mlp")),
+        "wo": Param(scaled_init(rng.next(), (f, d), dtype, fan_in=f), ("mlp", "embed")),
+    }
+
+
+def mlp_block(p, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,257 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM is implemented in its chunkwise-parallel form (the same chunked-scan
+skeleton as SSD): per head, a matrix memory C ∈ R^{dk×dv} and normaliser
+n ∈ R^{dk} decay with a scalar forget gate and accumulate i_t·k_t v_tᵀ.
+TPU adaptation note (DESIGN.md §7): gates use sigmoid (GLA-style) rather
+than the paper's exp-with-stabiliser — the chunkwise decay products stay in
+[0,1] so no running-max state is needed; the architecture (matrix memory,
+normaliser, output gating) is unchanged.
+
+sLSTM keeps the paper's exponential gating *with* the m_t stabiliser — it
+is a per-timestep ``lax.scan`` (inherently sequential; block-diagonal
+recurrent weights per head), which is exactly why xLSTM places only every
+k-th block as sLSTM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.axes import shard
+from .common import Param, rms_norm, scaled_init
+
+__all__ = [
+    "init_mlstm",
+    "mlstm_block",
+    "mlstm_decode",
+    "mlstm_state_shape",
+    "init_slstm",
+    "slstm_block",
+    "slstm_decode",
+    "slstm_state_shape",
+]
+
+
+# --------------------------------------------------------------------- mLSTM
+def _mlstm_dims(cfg):
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    heads = cfg.num_heads
+    dh = di // heads
+    return di, heads, dh
+
+
+def init_mlstm(rng, cfg, dtype):
+    d = cfg.d_model
+    di, heads, dh = _mlstm_dims(cfg)
+    return {
+        "w_up": Param(scaled_init(rng.next(), (d, 2 * di), dtype), ("embed", "inner_flat")),
+        "wq": Param(scaled_init(rng.next(), (di, di), dtype), ("inner_flat", "inner_flat")),
+        "wk": Param(scaled_init(rng.next(), (di, di), dtype), ("inner_flat", "inner_flat")),
+        "wv": Param(scaled_init(rng.next(), (di, di), dtype), ("inner_flat", "inner_flat")),
+        "w_i": Param(scaled_init(rng.next(), (di, heads), dtype), ("inner_flat", None)),
+        "w_f": Param(scaled_init(rng.next(), (di, heads), dtype), ("inner_flat", None)),
+        "b_f": Param(jnp.full((heads,), 3.0, dtype), (None,)),  # open forget gates
+        "out_norm": Param(jnp.zeros((di,), dtype), ("inner_flat",)),
+        "w_down": Param(scaled_init(rng.next(), (di, d), dtype, fan_in=di), ("inner_flat", "embed")),
+    }
+
+
+def mlstm_state_shape(cfg, batch):
+    di, heads, dh = _mlstm_dims(cfg)
+    return {"C": (batch, heads, dh, dh), "n": (batch, heads, dh)}
+
+
+def _mlstm_chunked(q, k, v, ig, lf, chunk, init_state=None):
+    """Chunkwise mLSTM. q/k/v: (b,s,h,dh); ig (sigmoid'd): (b,s,h);
+    lf = log f (negative): (b,s,h). Returns (y, state)."""
+    b, s, h, dh = q.shape
+    assert s % chunk == 0
+    nc = s // chunk
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    qc = q.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    ic = ig.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    fc = lf.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+
+    def step(carry, inp):
+        C, n = carry  # (b,h,dk,dv), (b,h,dk)
+        qq, kk, vv, ii, ff = inp
+        seg = jnp.cumsum(ff, axis=1)          # (b, chunk, h)
+        total = seg[:, -1]
+        li = seg[:, :, None, :]
+        lj = seg[:, None, :, :]
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], li - lj, -jnp.inf))
+        qk = jnp.einsum("bqhd,bkhd->bqkh", qq, kk)
+        w = qk * decay * ii[:, None, :, :]     # (b,q,k,h)
+        y = jnp.einsum("bqkh,bkhd->bqhd", w, vv)
+        den = w.sum(axis=2)                    # q·n_q, intra part (b,q,h)
+        # inter-chunk
+        pd = jnp.exp(seg)                      # decay applied to entering state
+        y = y + jnp.einsum("bqh,bqhd,bhde->bqhe", pd, qq, C)
+        den = den + jnp.einsum("bqh,bqhd,bhd->bqh", pd, qq, n)
+        # state update
+        wdec = jnp.exp(total[:, None, :] - seg) * ii  # (b,k,h)
+        C_new = C * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bkh,bkhd,bkhe->bhde", wdec, kk, vv
+        )
+        n_new = n * jnp.exp(total)[:, :, None] + jnp.einsum("bkh,bkhd->bhd", wdec, kk)
+        out = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        return (C_new, n_new), out
+
+    if init_state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        C0 = init_state["C"].astype(jnp.float32)
+        n0 = init_state["n"].astype(jnp.float32)
+    (C, n), ys = jax.lax.scan(step, (C0, n0), (qc, kc, vc, ic, fc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return y, {"C": C, "n": n}
+
+
+def _mlstm_qkvif(p_, x, cfg):
+    b, s, _ = x.shape
+    di, heads, dh = _mlstm_dims(cfg)
+    u = jnp.einsum("bsd,de->bse", x, p_["w_up"])
+    xin, z = u[..., :di], u[..., di:]
+    q = jnp.einsum("bse,ef->bsf", xin, p_["wq"]).reshape(b, s, heads, dh)
+    k = jnp.einsum("bse,ef->bsf", xin, p_["wk"]).reshape(b, s, heads, dh) * dh**-0.5
+    v = jnp.einsum("bse,ef->bsf", xin, p_["wv"]).reshape(b, s, heads, dh)
+    ig = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", xin, p_["w_i"]).astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", xin, p_["w_f"]).astype(jnp.float32)
+        + p_["b_f"].astype(jnp.float32)
+    )
+    return q, k, v, ig, lf, z
+
+
+def mlstm_block(p_, x, cfg, *, init_state=None, chunk=256):
+    b, s, d = x.shape
+    di, heads, dh = _mlstm_dims(cfg)
+    q, k, v, ig, lf, z = _mlstm_qkvif(p_, x, cfg)
+    q = shard(q, "batch", None, None, "inner_heads")
+    chunk = min(chunk, s)
+    y, state = _mlstm_chunked(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        ig, lf, chunk, init_state,
+    )
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, p_["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p_["w_down"]), state
+
+
+def mlstm_decode(p_, x, state, cfg):
+    b = x.shape[0]
+    di, heads, dh = _mlstm_dims(cfg)
+    q, k, v, ig, lf, z = _mlstm_qkvif(p_, x, cfg)
+    q0, k0, v0 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    f = jnp.exp(lf[:, 0])  # (b,h)
+    i = ig[:, 0]
+    C = state["C"] * f[:, :, None, None] + i[:, :, None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k0, v0
+    )
+    n = state["n"] * f[:, :, None] + i[:, :, None] * k0
+    y = jnp.einsum("bhd,bhde->bhe", q0, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n))
+    y = (y / jnp.maximum(den, 1.0)[..., None]).reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y, p_["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p_["w_down"]), {"C": C, "n": n}
+
+
+# --------------------------------------------------------------------- sLSTM
+def _slstm_dims(cfg):
+    d = cfg.d_model
+    heads = cfg.num_heads
+    dh = d // heads
+    return d, heads, dh
+
+
+def init_slstm(rng, cfg, dtype):
+    d, heads, dh = _slstm_dims(cfg)
+    p = {}
+    for g in ("z", "i", "f", "o"):
+        p[f"w_{g}"] = Param(scaled_init(rng.next(), (d, d), dtype), ("embed", "embed2"))
+        p[f"r_{g}"] = Param(
+            scaled_init(rng.next(), (heads, dh, dh), dtype, fan_in=dh) * 0.0,
+            ("inner_heads", None, None),
+        )
+        p[f"b_{g}"] = Param(
+            jnp.full((d,), 1.0 if g == "f" else 0.0, dtype), ("embed",)
+        )
+    p["out_norm"] = Param(jnp.zeros((d,), dtype), ("embed",))
+    p["w_out"] = Param(scaled_init(rng.next(), (d, d), dtype), ("embed", "embed2"))
+    return p
+
+
+def slstm_state_shape(cfg, batch):
+    d, heads, dh = _slstm_dims(cfg)
+    return {
+        "c": (batch, d), "n": (batch, d), "h": (batch, d), "m": (batch, d)
+    }
+
+
+def _slstm_cell(p_, xg, state, cfg):
+    """One timestep. xg: dict of pre-computed W x_t (b, d) per gate."""
+    d, heads, dh = _slstm_dims(cfg)
+    c, n, h, m = state
+    hh = h.reshape(-1, heads, dh)
+
+    def rec(g):
+        r = jnp.einsum("bhd,hde->bhe", hh, p_[f"r_{g}"].astype(jnp.float32))
+        return xg[g] + r.reshape(-1, d) + p_[f"b_{g}"].astype(jnp.float32)
+
+    zt = jnp.tanh(rec("z"))
+    it = rec("i")
+    ft = rec("f")
+    ot = jax.nn.sigmoid(rec("o"))
+    # exponential gating with stabiliser (xLSTM eq. 15-17)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p_, x, cfg, *, init_state=None):
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    pre = {
+        g: jnp.einsum("bsd,de->bse", xf, p_[f"w_{g}"].astype(jnp.float32))
+        for g in ("z", "i", "f", "o")
+    }
+    if init_state is None:
+        z0 = jnp.zeros((b, d), jnp.float32)
+        state0 = (z0, z0, z0, z0 - 1e30)
+    else:
+        state0 = tuple(init_state[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+
+    def step(state, t):
+        xg = {g: pre[g][:, t] for g in ("z", "i", "f", "o")}
+        new = _slstm_cell(p_, xg, state, cfg)
+        return new, new[2]
+
+    state, hs = jax.lax.scan(step, state0, jnp.arange(s))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)  # (b, s, d)
+    y = rms_norm(y, p_["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p_["w_out"])
+    c, n, h, m = state
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode(p_, x, state, cfg):
+    b, _, d = x.shape
+    xf = x[:, 0].astype(jnp.float32)
+    xg = {
+        g: jnp.einsum("bd,de->be", xf, p_[f"w_{g}"].astype(jnp.float32))
+        for g in ("z", "i", "f", "o")
+    }
+    st = tuple(state[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+    c, n, h, m = _slstm_cell(p_, xg, st, cfg)
+    y = rms_norm(h[:, None].astype(x.dtype), p_["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p_["w_out"])
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,88 @@
+"""Logical-axis sharding: annotation helpers usable from model code.
+
+Model code names array dimensions with *logical* axes ("batch", "embed",
+"heads", ...). A :class:`ShardingRules` context maps logical axes to mesh
+axes, with two safety rails:
+
+* divisibility — JAX rejects uneven shards, so a rule is applied to a dim
+  only if the mesh-axis size divides it (otherwise that dim is replicated);
+* no-mesh no-op — without an active context, ``shard()`` is the identity,
+  so single-device smoke tests run the exact same model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "sharding_ctx", "shard", "logical_spec", "current_ctx"]
+
+_LOCAL = threading.local()
+
+
+class ShardingRules:
+    """logical axis name -> mesh axis (str), tuple of mesh axes, or None."""
+
+    def __init__(self, mesh: jax.sharding.Mesh, rules: dict[str, object]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def _mesh_size(self, target) -> int:
+        if target is None:
+            return 1
+        if isinstance(target, tuple):
+            return math.prod(self.mesh.shape[t] for t in target)
+        return self.mesh.shape[target]
+
+    def spec_for(self, axes: tuple[str | None, ...], shape: tuple[int, ...]) -> P:
+        assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+        parts, used = [], set()
+        for name, dim in zip(axes, shape):
+            target = self.rules.get(name) if name is not None else None
+            if target is None:
+                parts.append(None)
+                continue
+            flat = target if isinstance(target, tuple) else (target,)
+            if any(t in used for t in flat):
+                parts.append(None)  # a mesh axis may appear only once per spec
+                continue
+            if dim % self._mesh_size(target) != 0:
+                parts.append(None)  # divisibility rail (replicate instead)
+                continue
+            used.update(flat)
+            parts.append(target)
+        return P(*parts)
+
+    def sharding_for(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+
+def current_ctx() -> ShardingRules | None:
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: ShardingRules):
+    prev = current_ctx()
+    _LOCAL.ctx = rules
+    try:
+        yield rules
+    finally:
+        _LOCAL.ctx = prev
+
+
+def logical_spec(axes, shape) -> P:
+    ctx = current_ctx()
+    return P() if ctx is None else ctx.spec_for(axes, shape)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without ctx)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.sharding_for(axes, x.shape))

@@ -1,0 +1,26 @@
+"""Training losses: causal LM CE (+ z-loss) and MoE auxiliary loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_loss"]
+
+
+def lm_loss(logits, targets, loss_mask, *, aux=0.0, aux_weight=0.0, z_weight=1e-4):
+    """Masked token-level cross entropy in fp32.
+
+    logits: (B, S, V); targets: (B, S) int32; loss_mask: (B, S) float.
+    Works for causal LM (mask = valid next-token positions) and for the
+    encoder masked-prediction objective (mask = masked positions).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    ce = (nll * loss_mask).sum() / denom
+    zl = ((logz * logz) * loss_mask).sum() / denom
+    total = ce + z_weight * zl + aux_weight * aux
+    return total, {"ce": ce, "z_loss": zl, "aux": jnp.asarray(aux, jnp.float32)}

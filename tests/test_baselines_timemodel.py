@@ -1,0 +1,91 @@
+"""Baseline loaders (PyTorch-style, CoorDL, No-IO) + the epoch-time model."""
+
+import numpy as np
+
+from repro.core import (
+    ChunkingPlan,
+    Cluster,
+    CoorDLLoader,
+    EpochSampler,
+    NoIOLoader,
+    PipelineTimeModel,
+    PyTorchStyleLoader,
+    StepIO,
+    run_baseline_epoch,
+)
+
+
+def make(n=2000, nodes=2, mem_frac=0.3, seed=0):
+    sizes = np.full(n, 1000, dtype=np.int64)
+    plan = ChunkingPlan.create(sizes, 8, num_slots=64, seed=seed)
+    sampler = EpochSampler(n, nodes, seed=seed + 1)
+    mem = int(sizes.sum() * mem_frac / nodes)
+    return plan, sampler, mem
+
+
+class TestBaselines:
+    def test_coordl_hit_rate_matches_cache_fraction(self):
+        plan, sampler, mem = make(mem_frac=0.4)
+        loader = CoorDLLoader(plan, 2, mem)
+        stats, _ = run_baseline_epoch(loader, sampler, 0, 32)
+        cached_frac = (loader.cached_on >= 0).mean()
+        hit_frac = (stats.local_hits + stats.remote_requests) / stats.accesses
+        assert abs(hit_frac - cached_frac) < 0.02
+        assert stats.remote_requests > 0  # peer-cache sharing active
+
+    def test_pytorch_lru_thrashes_under_random_exactly_once(self):
+        """Paper §2.1: with dataset >> memory and a fresh shuffle each epoch,
+        LRU hit rate collapses toward the memory fraction."""
+        plan, sampler, mem = make(mem_frac=0.25)
+        loader = PyTorchStyleLoader(plan, 2, mem)
+        run_baseline_epoch(loader, sampler, 0, 32)  # warm epoch
+        loader.stats = type(loader.stats)()
+        stats, _ = run_baseline_epoch(loader, sampler, 1, 32)
+        hit = stats.local_hits / stats.accesses
+        assert hit < 0.3, hit
+
+    def test_no_io_has_zero_demand(self):
+        plan, sampler, _ = make()
+        stats, io = run_baseline_epoch(NoIOLoader(plan, 2), sampler, 0, 32)
+        assert stats.disk_bytes == 0
+        assert all(x.disk_bytes == 0 and x.file_reads == 0 for s in io for x in s)
+
+    def test_redox_reads_fewer_ops_than_pytorch(self):
+        """The paper's core effect: chunked reads collapse per-file ops."""
+        plan, sampler, mem = make(mem_frac=0.3)
+        pt = PyTorchStyleLoader(plan, 2, mem)
+        pt_stats, _ = run_baseline_epoch(pt, sampler, 0, 32)
+        cluster = Cluster(plan, 2, seed=0)
+        res = cluster.run_epoch(sampler, 0, 32, collect_returned=False)
+        assert res.stats.chunk_loads < pt_stats.memory_misses / 2
+
+
+class TestTimeModel:
+    TM = PipelineTimeModel(
+        disk_bw=100e6, file_overhead=5e-3, chunk_overhead=5e-3,
+        net_bw=1e9, net_latency=1e-3,
+    )
+
+    def test_io_time_components(self):
+        io = StepIO(chunk_loads=2, disk_bytes=100e6, file_reads=10,
+                    net_messages=4, net_bytes=1e9)
+        t = self.TM.io_time(io)
+        assert abs(t - (2 * 5e-3 + 1.0 + 10 * 5e-3 + 4e-3 + 1.0)) < 1e-9
+
+    def test_epoch_pipelined_bound(self):
+        steps = [[StepIO(disk_bytes=50e6)] * 4]  # 0.5s io per step
+        # compute-bound: 4x1.0 + pipeline fill (0.5)
+        assert abs(self.TM.epoch_time(steps, compute_per_step=1.0) - 4.5) < 1e-9
+        # io-bound: 4x0.5 + fill
+        assert abs(self.TM.epoch_time(steps, compute_per_step=0.1) - 2.5) < 1e-9
+
+    def test_epoch_strict_no_queue(self):
+        steps = [[StepIO(disk_bytes=50e6)] * 4]
+        assert abs(self.TM.epoch_time_strict(steps, compute_per_step=1.0) - 4.0) < 1e-9
+        assert abs(self.TM.epoch_time_strict(steps, compute_per_step=0.1) - 2.0) < 1e-9
+
+    def test_epoch_max_over_nodes(self):
+        fast = [StepIO()] * 3
+        slow = [StepIO(disk_bytes=100e6)] * 3  # 1s io/step
+        t = self.TM.epoch_time([fast, slow], compute_per_step=0.2)
+        assert abs(t - 4.0) < 1e-9  # max(0.6, 3.0) + 1.0 fill

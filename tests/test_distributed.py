@@ -1,0 +1,144 @@
+"""Distributed protocol tests: ownership, prefetch, ablations, elasticity (paper §3.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkingPlan, Cluster, EpochSampler
+
+
+def make(n=960, c=8, slots=64, nodes=3, seed=0, sizes=None, **kw):
+    sizes = np.full(n, 100, dtype=np.int64) if sizes is None else sizes
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    cluster = Cluster(plan, nodes, seed=seed, **kw)
+    sampler = EpochSampler(n, nodes, seed=seed + 99)
+    return plan, cluster, sampler
+
+
+class TestDistributedProtocol:
+    @pytest.mark.parametrize("prefetch", [True, False])
+    @pytest.mark.parametrize("policy", ["max_fill", "random"])
+    def test_global_exactly_once(self, prefetch, policy):
+        _, cluster, sampler = make(prefetch=prefetch, policy=policy)
+        res = cluster.run_epoch(sampler, 0, batch_per_node=16)
+        all_returned = np.concatenate(res.returned)
+        assert sorted(all_returned.tolist()) == list(range(960))
+
+    def test_multi_epoch(self):
+        _, cluster, sampler = make()
+        for epoch in range(3):
+            res = cluster.run_epoch(sampler, epoch, batch_per_node=16)
+            assert sorted(np.concatenate(res.returned).tolist()) == list(range(960))
+
+    def test_prefetch_reduces_remote_requests(self):
+        """Paper Table 5: prefetching collapses remote on-demand requests."""
+        _, c_pf, sampler = make(prefetch=True)
+        _, c_np, _ = make(prefetch=False)
+        r_pf = c_pf.run_epoch(sampler, 0, batch_per_node=16)
+        r_np = c_np.run_epoch(sampler, 0, batch_per_node=16)
+        assert r_pf.stats.remote_requests < r_np.stats.remote_requests
+        assert r_pf.stats.remote_prefetch_hits > 0
+        assert r_np.stats.remote_prefetch_hits == 0
+
+    def test_prefetch_improves_fill_rate(self):
+        """Paper Fig. 7: shipping prefetches frees slots -> higher fill rate."""
+        _, c_pf, sampler = make(prefetch=True, nodes=4)
+        _, c_np, _ = make(prefetch=False, nodes=4)
+        r_pf = c_pf.run_epoch(sampler, 0, batch_per_node=16)
+        r_np = c_np.run_epoch(sampler, 0, batch_per_node=16)
+        assert r_pf.stats.mean_fill_rate >= r_np.stats.mean_fill_rate
+
+    def test_remote_memory_budget_respected(self):
+        sizes = np.full(960, 100, dtype=np.int64)
+        limit = 500  # only 5 files' worth of remote memory
+        _, cluster, sampler = make(
+            sizes=sizes, remote_memory_limit_bytes=limit, prefetch=True
+        )
+        cluster.run_epoch(sampler, 0, batch_per_node=16)
+        for st in (n.stats for n in cluster.nodes):
+            assert st.peak_remote_bytes <= limit
+
+    def test_larger_remote_memory_more_prefetch(self):
+        """Paper Fig. 12 trend: bigger budget -> more prefetched data (to a point)."""
+        received = []
+        for limit in (200, 2000, 10**9):
+            _, cluster, sampler = make(remote_memory_limit_bytes=limit)
+            res = cluster.run_epoch(sampler, 0, batch_per_node=16)
+            received.append(res.stats.prefetch_received)
+        assert received[0] <= received[1] <= received[2]
+        assert received[2] > 0
+
+    def test_single_node_cluster_matches_local(self):
+        _, cluster, sampler = make(nodes=1)
+        res = cluster.run_epoch(sampler, 0, batch_per_node=16)
+        assert res.stats.remote_requests == 0
+        assert res.stats.prefetch_sent == 0
+        assert sorted(res.returned[0].tolist()) == list(range(960))
+
+    def test_owner_disk_io_attribution(self):
+        _, cluster, sampler = make(nodes=3, prefetch=False)
+        res = cluster.run_epoch(sampler, 0, batch_per_node=16)
+        # all disk traffic is chunk-granular: no per-file reads ever
+        for steps in res.per_node_step_io:
+            for io in steps:
+                assert io.file_reads == 0
+
+    def test_ablation_grid_runs(self):
+        """The four paper variants (Table 4) all satisfy exactly-once."""
+        for policy in ("max_fill", "random"):
+            for prefetch in (True, False):
+                _, cluster, sampler = make(policy=policy, prefetch=prefetch)
+                res = cluster.run_epoch(sampler, 0, batch_per_node=16)
+                assert sorted(np.concatenate(res.returned).tolist()) == list(
+                    range(960)
+                )
+
+
+class TestElasticity:
+    def test_mid_epoch_failure_preserves_exactly_once(self):
+        n, nodes = 960, 3
+        _, cluster, sampler = make(n=n, nodes=nodes)
+        seqs = cluster.begin_epoch(sampler, 0)
+        returned = []
+        io = {}
+        # every node processes its first 100 accesses
+        upto = 100
+        for r in range(nodes):
+            for pos in range(upto):
+                f, _ = cluster.access(r, pos, int(seqs[r][pos]), io)
+                returned.append(f)
+        # node 2 dies; its tail is redistributed, ownership remapped
+        cluster.fail_node(2, processed_upto=upto)
+        for r in (0, 1):
+            seq = cluster.sequences[r]
+            for pos in range(upto, len(seq)):
+                f, _ = cluster.access(r, pos, int(seq[pos]), io)
+                returned.append(f)
+        assert sorted(returned) == list(range(n)), (
+            "files lost or duplicated across the failure"
+        )
+
+    def test_failure_with_outstanding_prefetches(self):
+        # Stress: many prefetches in flight when the node dies.
+        n, nodes = 1920, 4
+        _, cluster, sampler = make(n=n, nodes=nodes, slots=128, prefetch=True)
+        seqs = cluster.begin_epoch(sampler, 0)
+        returned = []
+        io = {}
+        upto = 150
+        for r in range(nodes):
+            for pos in range(upto):
+                f, _ = cluster.access(r, pos, int(seqs[r][pos]), io)
+                returned.append(f)
+        cluster.fail_node(1, processed_upto=upto)
+        for r in (0, 2, 3):
+            seq = cluster.sequences[r]
+            for pos in range(upto, len(seq)):
+                f, _ = cluster.access(r, pos, int(seq[pos]), io)
+                returned.append(f)
+        assert sorted(returned) == list(range(n))
+
+    def test_ownership_fully_reassigned(self):
+        _, cluster, sampler = make(nodes=3)
+        cluster.begin_epoch(sampler, 0)
+        cluster.fail_node(0, processed_upto=0)
+        assert not (cluster.owner_of_group == 0).any()

@@ -1,0 +1,64 @@
+"""Examples must stay runnable (subprocess smoke, tiny arguments)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_example(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True,
+        cwd=ROOT, env=env, timeout=timeout,
+    )
+
+
+@pytest.mark.slow
+class TestExamples:
+    def test_quickstart(self):
+        p = run_example(["examples/quickstart.py"])
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "exactly-once verified" in p.stdout
+        assert "redirection in action" in p.stdout
+
+    def test_train_lm_small(self):
+        p = run_example(
+            ["examples/train_lm.py", "--steps", "12", "--preset", "small",
+             "--ckpt-every", "6"]
+        )
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "done: 12 steps" in p.stdout
+
+    def test_serve_decode(self):
+        p = run_example(
+            ["examples/serve_decode.py", "--arch", "tinyllama-1.1b",
+             "--new-tokens", "6", "--prompt-len", "16"]
+        )
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "decoded 6 tokens/seq" in p.stdout
+
+    def test_launcher_train_cli(self):
+        p = run_example(
+            ["-m", "repro.launch.train", "--arch", "xlstm-350m", "--steps", "6",
+             "--seq-len", "64", "--num-docs", "256"]
+        )
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "done: 6 steps" in p.stdout
+
+    def test_launcher_serve_cli(self):
+        p = run_example(
+            ["-m", "repro.launch.serve", "--arch", "deepseek-moe-16b",
+             "--new-tokens", "4", "--prompt-len", "8"]
+        )
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "decoded 4 tok/seq" in p.stdout
+
+    def test_launcher_serve_rejects_encoder(self):
+        p = run_example(["-m", "repro.launch.serve", "--arch", "hubert-xlarge"])
+        assert p.returncode == 1
+        assert "encoder-only" in p.stdout

@@ -1,0 +1,68 @@
+"""Unit tests for the loop-aware HLO cost model (launch/hlo_cost.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import hlo_costs
+
+
+def compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+class TestHloCosts:
+    def test_plain_matmul(self):
+        f = lambda a, b: a @ b
+        s = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        t = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+        c = hlo_costs(compile_text(f, s, t))
+        assert c["flops"] == 2 * 32 * 64 * 16
+
+    def test_scan_multiplies_trip_count(self):
+        def f(xs, w):
+            def body(c, x):
+                return c @ w + x, None
+            c, _ = jax.lax.scan(body, xs[0], xs)
+            return c
+
+        xs = jax.ShapeDtypeStruct((7, 16, 16), jnp.float32)
+        w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+        c = hlo_costs(compile_text(f, xs, w))
+        assert c["flops"] == 7 * 2 * 16**3
+
+    def test_nested_scans_multiply(self):
+        def f(xs, w):
+            def outer(c, x):
+                def inner(ci, _):
+                    return ci @ w, None
+                ci, _ = jax.lax.scan(inner, c + x, None, length=3)
+                return ci, None
+            c, _ = jax.lax.scan(outer, xs[0], xs)
+            return c
+
+        xs = jax.ShapeDtypeStruct((5, 8, 8), jnp.float32)
+        w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        c = hlo_costs(compile_text(f, xs, w))
+        assert c["flops"] == 5 * 3 * 2 * 8**3
+
+    def test_batched_dot_contraction(self):
+        f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+        s = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        t = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+        c = hlo_costs(compile_text(f, s, t))
+        assert c["flops"] == 4 * 2 * 8 * 16 * 8
+
+    def test_bytes_dots_nonzero_and_bounded(self):
+        f = lambda a, b: (a @ b).sum()
+        s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        c = hlo_costs(compile_text(f, s, s))
+        lo = 2 * 64 * 64 * 4  # two operands
+        hi = 16 * 64 * 64 * 4
+        assert lo <= c["bytes_dots"] <= hi
+
+    def test_no_dots_no_flops(self):
+        f = lambda a: jnp.tanh(a) + 1
+        s = jax.ShapeDtypeStruct((128,), jnp.float32)
+        c = hlo_costs(compile_text(f, s))
+        assert c["flops"] == 0

@@ -1,0 +1,145 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.chunk_gather.ops import chunk_gather
+from repro.kernels.chunk_gather.ref import chunk_gather_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_attention_gqa
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,s,d", [(4, 256, 64), (2, 128, 32), (1, 512, 128), (3, 192, 64)])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, bh, s, d, causal, dtype):
+        q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), dtype) for _ in range(3))
+        bq = min(64, s)
+        out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bq)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype),
+        )
+
+    @pytest.mark.parametrize("window", [32, 96, 1024])
+    def test_sliding_window(self, window):
+        bh, s, d = 2, 256, 64
+        q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), jnp.float32) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_block_shape_independence(self):
+        bh, s, d = 2, 256, 64
+        q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), jnp.float32) for _ in range(3))
+        outs = [
+            flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5, rtol=1e-5)
+
+    def test_gqa_wrapper(self):
+        b, s, h, kvh, d = 2, 128, 8, 2, 32
+        q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        out = flash_attention_gqa(q, k, v, block_q=64, block_k=64)
+        assert out.shape == (b, s, h, d)
+        assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,kvh,s,d", [(2, 8, 2, 512, 64), (1, 4, 4, 256, 32), (3, 16, 4, 1024, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, h, kvh, s, d, dtype):
+        q = jnp.asarray(RNG.normal(size=(b, h, d)), dtype)
+        ck = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), dtype)
+        cv = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), dtype)
+        mask = jnp.asarray(RNG.random((b, s)) < 0.75)
+        out = decode_attention(q, ck, cv, mask, block_k=128)
+        g = h // kvh
+        qg = q.reshape(b * kvh, g, d)
+        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+        m = jnp.repeat(mask[:, None, :], kvh, 1).reshape(b * kvh, s)
+        ref = decode_attention_ref(qg, fold(ck), fold(cv), m).reshape(b, h, d)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=_tol(dtype), rtol=_tol(dtype),
+        )
+
+    def test_ring_buffer_mask(self):
+        """Rotating-window cache = arbitrary validity pattern; exactness."""
+        b, h, kvh, s, d = 1, 4, 2, 256, 64
+        q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+        ck = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        cv = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        # only slots [64:128) valid, as after ring wrap-around
+        mask = jnp.zeros((b, s), bool).at[:, 64:128].set(True)
+        out = decode_attention(q, ck, cv, mask, block_k=64)
+        qg = q.reshape(b * kvh, h // kvh, d)
+        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+        m = jnp.repeat(mask[:, None, :], kvh, 1).reshape(b * kvh, s)
+        ref = decode_attention_ref(qg, fold(ck), fold(cv), m).reshape(b, h, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+class TestChunkGather:
+    @pytest.mark.parametrize("slots,L,B", [(64, 128, 16), (32, 256, 8), (16, 64, 32), (128, 512, 4)])
+    def test_exact(self, slots, L, B):
+        ct = jnp.asarray(RNG.integers(1, 1000, (slots, L)), jnp.int32)
+        lens = jnp.asarray(RNG.integers(1, L + 1, (slots,)), jnp.int32)
+        idx = jnp.asarray(RNG.integers(0, slots, (B,)), jnp.int32)
+        t, m = chunk_gather(ct, lens, idx)
+        tr, mr = chunk_gather_ref(ct, lens, idx)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(tr))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+    def test_duplicate_indices(self):
+        """Redirection may serve the same slot to multiple rows in a step."""
+        ct = jnp.asarray(RNG.integers(1, 100, (8, 32)), jnp.int32)
+        lens = jnp.full((8,), 32, jnp.int32)
+        idx = jnp.asarray([3, 3, 3, 0], jnp.int32)
+        t, _ = chunk_gather(ct, lens, idx)
+        np.testing.assert_array_equal(np.asarray(t[0]), np.asarray(t[1]))
+        np.testing.assert_array_equal(np.asarray(t[0]), np.asarray(ct[3]))
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("bh,s,p,n,chunk", [(4, 256, 64, 16, 64), (2, 128, 32, 32, 32), (1, 512, 64, 64, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_sequential_ref(self, bh, s, p, n, chunk, dtype):
+        x = jnp.asarray(RNG.normal(size=(bh, s, p)), dtype)
+        dt = jnp.asarray(RNG.random((bh, s)) * 0.5 + 0.01, jnp.float32)
+        a = jnp.asarray(-RNG.random((bh, 1)) * 2 - 0.1, jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(bh, s, n)), dtype)
+        c = jnp.asarray(RNG.normal(size=(bh, s, n)), dtype)
+        out = ssd_scan(x, dt, a, b, c, chunk=chunk)
+        ref = ssd_scan_ref(x, dt, a, b, c)
+        scale = float(jnp.max(jnp.abs(ref.astype(jnp.float32)))) + 1e-6
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+        assert err / scale < (5e-2 if dtype == jnp.bfloat16 else 2e-4), err / scale
+
+    def test_chunk_size_independence(self):
+        bh, s, p, n = 2, 256, 32, 16
+        x = jnp.asarray(RNG.normal(size=(bh, s, p)), jnp.float32)
+        dt = jnp.asarray(RNG.random((bh, s)) * 0.3 + 0.01, jnp.float32)
+        a = jnp.asarray(-RNG.random((bh, 1)) - 0.1, jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(bh, s, n)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(bh, s, n)), jnp.float32)
+        outs = [np.asarray(ssd_scan(x, dt, a, b, c, chunk=cs)) for cs in (32, 64, 128, 256)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,91 @@
+"""ChunkStore round-trips and the RedoxLoader → JAX bridge."""
+
+import numpy as np
+
+from repro.core import ChunkingPlan, ChunkStore, Cluster, EpochSampler, RedoxLoader
+from repro.data import SyntheticTokenDataset, decode_record
+
+
+def build_dataset(tmp_path, num_docs=192, chunk_size=4, slots=16, nodes=1):
+    ds = SyntheticTokenDataset(num_docs, vocab_size=97, mean_len=48, seed=3)
+    store = ds.build_store(tmp_path / "chunks", chunk_size, num_slots=slots, seed=1)
+    cluster = Cluster(store.plan, nodes, store=store, seed=2)
+    sampler = EpochSampler(num_docs, nodes, seed=4)
+    return ds, store, cluster, sampler
+
+
+class TestChunkStore:
+    def test_chunk_roundtrip(self, tmp_path):
+        ds, store, _, _ = build_dataset(tmp_path)
+        for k in (0, 1, store.plan.num_chunks - 1):
+            for fid, blob in store.read_chunk(k):
+                np.testing.assert_array_equal(
+                    decode_record(blob), ds.record_tokens(fid)
+                )
+
+    def test_file_roundtrip(self, tmp_path):
+        ds, store, _, _ = build_dataset(tmp_path)
+        for fid in (0, 7, 101, 191):
+            np.testing.assert_array_equal(
+                decode_record(store.read_file(fid)), ds.record_tokens(fid)
+            )
+
+    def test_reopen(self, tmp_path):
+        ds, store, _, _ = build_dataset(tmp_path)
+        back = ChunkStore.open(store.root)
+        assert back.plan.num_files == store.plan.num_files
+        assert back.read_file(5) == store.read_file(5)
+
+
+class TestRedoxLoader:
+    def test_batches_cover_epoch(self, tmp_path):
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(cluster, sampler, batch_per_node=16, seq_len=64)
+        seen_tokens = 0
+        batches = list(loader.epoch(0))
+        assert len(batches) == loader.steps_per_epoch()
+        for b in batches:
+            assert b["tokens"].shape == (16, 64)
+            assert b["targets"].shape == (16, 64)
+            assert b["loss_mask"].shape == (16, 64)
+            assert b["loss_mask"].sum() > 0
+            seen_tokens += int(b["loss_mask"].sum())
+        assert seen_tokens > 0
+
+    def test_batch_contents_are_real_records(self, tmp_path):
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(cluster, sampler, batch_per_node=8, seq_len=32)
+        batch = next(iter(loader.epoch(0)))
+        # Every row must be a prefix of SOME document (redirection allows any).
+        all_docs = {}
+        for d in range(ds.num_docs):
+            toks = ds.record_tokens(d)
+            all_docs[d] = toks
+        for i in range(8):
+            row = batch["tokens"][i]
+            m = batch["loss_mask"][i].astype(bool)
+            # row = [doc[0], ..., doc[n-1]] shifted view; reconstruct
+            full = np.concatenate([row[:1], batch["targets"][i]])[: m.sum() + 1]
+            matched = any(
+                len(t) >= len(full) and np.array_equal(t[: len(full)], full)
+                for t in all_docs.values()
+            )
+            assert matched, f"batch row {i} is not a prefix of any document"
+
+    def test_multi_node_loader(self, tmp_path):
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=3)
+        loader = RedoxLoader(cluster, sampler, batch_per_node=8, seq_len=32)
+        batches = list(loader.epoch(0))
+        for b in batches:
+            assert b["tokens"].shape == (24, 32)  # 3 nodes x 8
+
+    def test_async_loader_same_order(self, tmp_path):
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(cluster, sampler, batch_per_node=16, seq_len=32)
+        sync = [b["tokens"].copy() for b in loader.epoch(0)]
+        ds2, store2, cluster2, sampler2 = build_dataset(tmp_path / "b", nodes=1)
+        loader2 = RedoxLoader(cluster2, sampler2, batch_per_node=16, seq_len=32)
+        asy = [b["tokens"].copy() for b in loader2.epoch_async(0)]
+        assert len(sync) == len(asy)
+        for a, b in zip(sync, asy):
+            np.testing.assert_array_equal(a, b)

@@ -1,0 +1,156 @@
+"""Unit tests for the single-node Redox protocol (paper §3.2/§3.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkingPlan, EpochSampler, LocalNode
+
+
+def make_plan(n=96, c=4, slots=8, seed=0, sizes=None):
+    sizes = np.full(n, 100, dtype=np.int64) if sizes is None else sizes
+    return ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+
+
+class TestChunkingPlan:
+    def test_basic_shape(self):
+        plan = make_plan(n=96, c=4, slots=8)
+        assert plan.num_chunks == 24
+        assert plan.num_groups == 2
+        assert plan.group_width == 12
+        assert plan.num_slots == 8
+
+    def test_every_file_mapped_once(self):
+        plan = make_plan(n=97, c=4, slots=8)  # partial last chunk
+        flat = plan.chunk_files.reshape(-1)
+        members = flat[flat >= 0]
+        assert sorted(members.tolist()) == list(range(97))
+
+    def test_inverse_maps_consistent(self):
+        plan = make_plan(n=97, c=4, slots=8)
+        for f in range(97):
+            k, s = int(plan.chunk_of[f]), int(plan.slot_of[f])
+            assert plan.chunk_files[k, s] == f
+
+    def test_group_ranges_cover_chunks(self):
+        plan = make_plan(n=200, c=8, slots=24)
+        seen = []
+        for g in range(plan.num_groups):
+            a, b = plan.group_chunk_range(g)
+            seen.extend(range(a, b))
+        assert seen == list(range(plan.num_chunks))
+
+    def test_save_load_roundtrip(self, tmp_path):
+        plan = make_plan(n=50, c=4, slots=8)
+        plan.save(tmp_path / "plan.npz")
+        back = ChunkingPlan.load(tmp_path / "plan.npz")
+        np.testing.assert_array_equal(plan.chunk_files, back.chunk_files)
+        assert back.chunk_size == plan.chunk_size
+
+    def test_memory_bytes_sizing(self):
+        sizes = np.full(1000, 200, dtype=np.int64)
+        plan = ChunkingPlan.create(sizes, 10, memory_bytes=20_000)
+        # M = C / mean = 100 slots -> 10 abstract chunks
+        assert plan.num_slots == 100
+        assert plan.num_groups == 10
+
+
+class TestLocalProtocol:
+    def test_exactly_once_per_epoch(self):
+        plan = make_plan(n=96, c=4, slots=8)
+        node = LocalNode(plan, seed=1)
+        sampler = EpochSampler(96, 1, seed=5)
+        for epoch in range(3):
+            node.begin_epoch()
+            seq = sampler.global_sequence(epoch)
+            returned = [node.request(int(f)).file_id for f in seq]
+            assert sorted(returned) == list(range(96)), "exactly-once violated"
+            assert node.epoch_complete()
+
+    def test_redirection_preserves_slot(self):
+        plan = make_plan(n=96, c=4, slots=8)
+        node = LocalNode(plan, seed=2)
+        node.begin_epoch()
+        seq = EpochSampler(96, 1, seed=9).global_sequence(0)
+        for f in seq:
+            res = node.request(int(f))
+            # the returned file must be mapped to the same abstract location
+            assert plan.location_of_file(res.file_id) == plan.location_of_file(
+                res.requested
+            )
+
+    def test_miss_then_hits_within_chunk(self):
+        # After a cold miss fills a whole chunk, sibling slots should hit.
+        plan = make_plan(n=32, c=4, slots=4, seed=3)  # one group of 8 chunks
+        node = LocalNode(plan, seed=3)
+        node.begin_epoch()
+        first = node.request(0)
+        assert not first.hit and first.chunk_loaded is not None
+        # The other three slots of the abstract chunk are now resident.
+        hits = 0
+        for f in range(1, 32):
+            if plan.slot_of[f] != plan.slot_of[0]:
+                res = node.request(int(f))
+                hits += res.hit
+                break
+        assert hits == 1
+
+    def test_never_evict_invariant(self):
+        # AbstractMemory.fill asserts on overwrite; a full epoch exercising
+        # many refills must not trip it.
+        plan = make_plan(n=240, c=6, slots=12, seed=4)
+        node = LocalNode(plan, seed=4)
+        node.begin_epoch()
+        seq = EpochSampler(240, 1, seed=11).global_sequence(0)
+        for f in seq:
+            node.request(int(f))
+        assert node.epoch_complete()
+
+    def test_fill_rate_policy_beats_random_on_waste(self):
+        sizes = np.full(4096, 1000, dtype=np.int64)
+        plan = ChunkingPlan.create(sizes, 16, num_slots=256, seed=7)
+        sampler = EpochSampler(4096, 1, seed=13)
+        waste = {}
+        for policy in ("max_fill", "random"):
+            node = LocalNode(plan, policy=policy, seed=21)
+            node.begin_epoch()
+            for f in sampler.global_sequence(0):
+                node.request(int(f))
+            waste[policy] = node.stats.wasted_bytes
+        # Paper §3.3/Table 5: fill-rate-maximising selection wastes less.
+        assert waste["max_fill"] < waste["random"]
+
+    def test_first_fill_rate_is_one(self):
+        plan = make_plan(n=64, c=4, slots=8, seed=8)
+        node = LocalNode(plan, seed=8)
+        node.begin_epoch()
+        res = node.request(0)
+        assert res.fill_rate == 1.0  # empty abstract chunk, fresh chunk
+
+    def test_byte_accounting_zero_at_epoch_end(self):
+        sizes = np.random.default_rng(0).integers(50, 500, 128).astype(np.int64)
+        plan = ChunkingPlan.create(sizes, 4, num_slots=16, seed=9)
+        node = LocalNode(plan, seed=9)
+        node.begin_epoch()
+        for f in EpochSampler(128, 1, seed=17).global_sequence(0):
+            node.request(int(f))
+        assert node.memory.used_bytes == 0
+        assert node.stats.peak_local_bytes > 0
+
+    def test_disk_bytes_equals_filled_plus_wasted(self):
+        plan = make_plan(n=96, c=4, slots=8, seed=10)
+        node = LocalNode(plan, seed=10)
+        node.begin_epoch()
+        for f in EpochSampler(96, 1, seed=19).global_sequence(0):
+            node.request(int(f))
+        s = node.stats
+        assert s.disk_bytes == s.filled_bytes + s.wasted_bytes
+        # every file's bytes land in memory exactly once
+        assert s.filled_bytes == plan.file_sizes.sum()
+
+    def test_epoch_reset_requires_drained_memory(self):
+        plan = make_plan(n=32, c=4, slots=4)
+        node = LocalNode(plan, seed=0)
+        node.begin_epoch()
+        node.request(0)  # loads a chunk, leaves residents behind
+        with pytest.raises(AssertionError):
+            node.begin_epoch()

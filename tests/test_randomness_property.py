@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for the paper's §4.1 randomness guarantee
+and the protocol's structural invariants.
+
+The theorem: a DL framework iterating a random sequence of unique indices
+through Redox receives data in a (uniformly) random order, each file exactly
+once. We check:
+
+* exactly-once under arbitrary plan geometry (sizes, chunk_size, slots,
+  node counts, budgets) — hypothesis searches the configuration space;
+* slot-consistency of redirection (returned file always maps to the same
+  abstract location as the requested one);
+* empirical uniformity: over many epochs, the file returned for the *first
+  access to a location* is ~uniform over that location's n candidates
+  (chi-square), i.e. redirection does not bias which chunk member is served.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ChunkingPlan, Cluster, EpochSampler, LocalNode
+
+
+@st.composite
+def plan_geometry(draw):
+    n = draw(st.integers(16, 400))
+    c = draw(st.integers(1, 16))
+    slots = draw(st.integers(c, 4 * c * max(1, n // (4 * c) or 1)))
+    seed = draw(st.integers(0, 2**16))
+    size_kind = draw(st.sampled_from(["const", "varied"]))
+    if size_kind == "const":
+        sizes = np.full(n, 128, dtype=np.int64)
+    else:
+        rng = np.random.default_rng(seed)
+        sizes = rng.integers(16, 2048, n).astype(np.int64)
+    return n, c, slots, seed, sizes
+
+
+@given(plan_geometry())
+@settings(max_examples=40, deadline=None)
+def test_local_exactly_once_any_geometry(geom):
+    n, c, slots, seed, sizes = geom
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    node = LocalNode(plan, seed=seed)
+    node.begin_epoch()
+    seq = EpochSampler(n, 1, seed=seed + 1).global_sequence(0)
+    returned = [node.request(int(f)).file_id for f in seq]
+    assert sorted(returned) == list(range(n))
+    assert node.epoch_complete()
+
+
+@given(plan_geometry())
+@settings(max_examples=40, deadline=None)
+def test_local_redirection_slot_consistent(geom):
+    n, c, slots, seed, sizes = geom
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    node = LocalNode(plan, seed=seed)
+    node.begin_epoch()
+    for f in EpochSampler(n, 1, seed=seed + 2).global_sequence(0):
+        res = node.request(int(f))
+        assert plan.location_of_file(res.file_id) == plan.location_of_file(
+            res.requested
+        )
+
+
+@given(
+    plan_geometry(),
+    st.integers(2, 5),
+    st.integers(0, 2),
+    st.sampled_from([64, 1024, 1 << 40]),
+)
+@settings(max_examples=25, deadline=None)
+def test_distributed_exactly_once_any_geometry(geom, nodes, window_exp, budget):
+    n, c, slots, seed, sizes = geom
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    cluster = Cluster(
+        plan,
+        nodes,
+        remote_memory_limit_bytes=budget,
+        prefetch_window=4**window_exp,
+        seed=seed,
+    )
+    sampler = EpochSampler(n, nodes, seed=seed + 3)
+    res = cluster.run_epoch(sampler, 0, batch_per_node=max(1, n // (nodes * 7)))
+    assert sorted(np.concatenate(res.returned).tolist()) == list(range(n))
+
+
+@given(plan_geometry())
+@settings(max_examples=30, deadline=None)
+def test_never_evict_and_byte_conservation(geom):
+    n, c, slots, seed, sizes = geom
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    node = LocalNode(plan, seed=seed)
+    node.begin_epoch()
+    for f in EpochSampler(n, 1, seed=seed + 4).global_sequence(0):
+        node.request(int(f))
+    s = node.stats
+    assert s.disk_bytes == s.filled_bytes + s.wasted_bytes
+    assert s.filled_bytes == int(sizes.sum())  # each file filled exactly once
+    assert node.memory.used_bytes == 0
+
+
+def test_first_fill_choice_uniform_chi_square():
+    """Lemma (§4.1): on the first miss of a location, the serving chunk is
+    uniform over the group. Run many single-shot epochs and chi-square the
+    identity of the first file returned for location 0."""
+    n, c = 120, 4
+    plan = ChunkingPlan.create(
+        np.full(n, 64, dtype=np.int64), c, num_slots=c, seed=5
+    )  # ONE group: n/c = 30 chunks, all mapped to the same abstract chunk
+    group_files_at_slot0 = plan.chunk_files[:, 0]
+    counts = {int(f): 0 for f in group_files_at_slot0}
+    trials = 3000
+    for t in range(trials):
+        node = LocalNode(plan, seed=t)
+        node.begin_epoch()
+        # first access of the epoch targets slot 0 (file = chunk 0 slot 0)
+        res = node.request(int(plan.chunk_files[0, 0]))
+        counts[res.file_id] += 1
+    k = len(counts)
+    expected = trials / k
+    chi2 = sum((obs - expected) ** 2 / expected for obs in counts.values())
+    # dof = 29; p=0.001 critical value ~ 58.3. Generous margin against flakes.
+    assert chi2 < 70.0, f"first-fill choice looks non-uniform: chi2={chi2:.1f}"
+
+
+def test_returned_stream_positionally_unbiased():
+    """Theorem (§4.1): the *returned* stream is a uniform random permutation.
+    Check a necessary condition: E[position of each file] is flat across
+    files (no file is systematically served early/late)."""
+    n, c = 64, 4
+    plan = ChunkingPlan.create(np.full(n, 64, dtype=np.int64), c, num_slots=8, seed=6)
+    pos_sum = np.zeros(n)
+    epochs = 400
+    sampler = EpochSampler(n, 1, seed=77)
+    for e in range(epochs):
+        node = LocalNode(plan, seed=e)
+        node.begin_epoch()
+        for pos, f in enumerate(sampler.global_sequence(e)):
+            pos_sum[node.request(int(f)).file_id] += pos
+    mean_pos = pos_sum / epochs
+    # Uniform permutation -> each file's mean position ~ (n-1)/2 with
+    # std  sqrt((n^2-1)/12 / epochs) ~ 0.92 for n=64, epochs=400.
+    center = (n - 1) / 2
+    sigma = np.sqrt((n * n - 1) / 12 / epochs)
+    assert np.all(np.abs(mean_pos - center) < 5 * sigma), (
+        "some file is served at a biased position"
+    )

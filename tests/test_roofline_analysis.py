@@ -1,0 +1,45 @@
+"""Roofline analysis module tests (consumes synthetic dry-run rows)."""
+
+from repro.launch.roofline import HW, analyze, model_flops, to_markdown
+
+
+def fake_row(arch="tinyllama-1.1b", shape="train_4k", flops=1e13, byts=1e11, coll=1e9):
+    return dict(
+        arch=arch, shape=shape, mesh="data16xmodel16", status="ok",
+        step_kind="train_step", flops_per_device=flops, bytes_per_device=byts,
+        collectives={"total_bytes": coll},
+        memory={"temp_tpu_adjusted": 5e9, "argument_size_in_bytes": 1e9},
+    )
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        a = analyze([fake_row()])[0]
+        assert abs(a["compute_s"] - 1e13 / HW["peak_flops"]) < 1e-9
+        assert abs(a["memory_s"] - 1e11 / HW["hbm_bw"]) < 1e-9
+        assert abs(a["collective_s"] - 1e9 / HW["ici_bw"]) < 1e-9
+        assert a["dominant"] == "memory"
+        assert a["fits_hbm"] is True
+
+    def test_model_flops_train_vs_decode(self):
+        t = model_flops("tinyllama-1.1b", "train_4k")
+        d = model_flops("tinyllama-1.1b", "decode_32k")
+        # train: 6*N*B*S ; decode: 2*N*B
+        assert t / d == (6 * 4096 * 256) / (2 * 128)
+
+    def test_moe_uses_active_params(self):
+        from repro.configs import get_config
+
+        kimi = get_config("kimi-k2-1t-a32b")
+        assert kimi.active_param_count() < 0.05 * kimi.param_count()
+        f = model_flops("kimi-k2-1t-a32b", "train_4k")
+        assert f == 6.0 * kimi.active_param_count() * 4096 * 256
+
+    def test_skip_rows_passthrough(self):
+        row = dict(arch="hubert-xlarge", shape="decode_32k", mesh="m", status="skip: x")
+        a = analyze([row])[0]
+        assert a["status"] == "skip: x"
+
+    def test_markdown_renders(self):
+        md = to_markdown(analyze([fake_row()]))
+        assert "| arch |" in md and "tinyllama" in md
