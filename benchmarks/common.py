@@ -1,21 +1,56 @@
-"""Shared benchmark driver: run one epoch of each loader under a scenario."""
+"""Shared benchmark driver: run one epoch of each loader under a scenario.
+
+Two modes:
+
+* *Simulated* (:func:`run_scenario`): protocol-exact counters priced by the
+  calibrated :class:`PipelineTimeModel` — reproduces the paper's tables.
+* *Real-bytes* (:func:`backend_report`): an actual on-disk chunk store is
+  built and an epoch is served through ``RedoxLoader.epoch_async``, once
+  per storage backend — measures observed chunk-read throughput (bytes
+  batched in per second the protocol spent blocked on storage).
+"""
 
 from __future__ import annotations
 
+import tempfile
 import time
+from pathlib import Path
+
+import numpy as np
 
 from repro.core import (
+    ChunkingPlan,
+    ChunkStore,
     Cluster,
     CoorDLLoader,
     EpochSampler,
+    MmapBackend,
     NoIOLoader,
+    ParallelBackend,
     PyTorchStyleLoader,
+    RedoxLoader,
+    VFSBackend,
     run_baseline_epoch,
 )
 
 from .calibration import Scenario
 
-__all__ = ["run_scenario", "epoch_time", "redox_epoch"]
+__all__ = [
+    "BACKEND_NAMES",
+    "backend_report",
+    "epoch_time",
+    "expand_backends",
+    "print_backend_table",
+    "redox_epoch",
+    "run_scenario",
+]
+
+BACKEND_NAMES = ("vfs", "mmap", "parallel")
+
+
+def expand_backends(selection: str) -> tuple:
+    """CLI helper: ``"all"`` -> every backend, else the one named."""
+    return BACKEND_NAMES if selection == "all" else (selection,)
 
 
 def epoch_time(scn: Scenario, per_node_step_io) -> float:
@@ -48,6 +83,127 @@ def redox_epoch(
     sampler = EpochSampler(plan.num_files, scn.nodes, seed=scn.seed + 1)
     res = cluster.run_epoch(sampler, epoch, scn.batch, collect_returned=False)
     return res, epoch_time(scn, res.per_node_step_io)
+
+
+class _UniformTokenRecords:
+    """Deterministic random int32-token records, generated vectorised."""
+
+    def __init__(self, lengths: np.ndarray, vocab: int, seed: int):
+        self.lengths = lengths
+        self.vocab = vocab
+        self.seed = seed
+
+    def __getitem__(self, i: int) -> bytes:
+        rng = np.random.default_rng((self.seed, 29, i))
+        n = int(self.lengths[i])
+        return rng.integers(0, self.vocab, n, dtype=np.int32).tobytes()
+
+
+def _build_bench_store(
+    root: Path, *, num_docs: int, mean_tokens: int, chunk_size: int,
+    groups: int, seed: int,
+) -> ChunkStore:
+    rng = np.random.default_rng((seed, 31))
+    lengths = rng.integers(mean_tokens // 2, 3 * mean_tokens // 2, num_docs)
+    records = _UniformTokenRecords(lengths.astype(np.int64), vocab=32000, seed=seed)
+    plan = ChunkingPlan.create(
+        lengths.astype(np.int64) * 4, chunk_size,
+        num_slots=groups * chunk_size, seed=seed,
+    )
+    return ChunkStore.build(root, plan, records)
+
+
+def _bench_backend(name: str, latency_s: float):
+    """Backend instances for the benchmark, sharing storage characteristics.
+
+    vfs and parallel read through the same VFS profile (incl. the emulated
+    per-op NAS head latency — see ``VFSBackend``), so their comparison
+    isolates the overlap the parallel pipeline buys. mmap models the
+    zero-copy page-cache path (no per-op syscall to pay latency on).
+    """
+    if name == "vfs":
+        return VFSBackend(latency_s=latency_s)
+    if name == "mmap":
+        return MmapBackend()
+    if name == "parallel":
+        return ParallelBackend(
+            VFSBackend(latency_s=latency_s), workers=4, readahead=24
+        )
+    raise ValueError(f"unknown benchmark backend {name!r}")
+
+
+def backend_report(
+    backends=("vfs", "mmap", "parallel"),
+    *,
+    num_docs: int = 2048,
+    mean_tokens: int = 4096,
+    chunk_size: int = 32,
+    groups: int = 8,
+    nodes: int = 1,
+    batch_per_node: int = 32,
+    seq_len: int = 512,
+    queue_depth: int = 4,
+    latency_ms: float = 2.0,
+    seed: int = 0,
+) -> list[dict]:
+    """One real-bytes ``epoch_async`` per backend over the same chunk store.
+
+    Returns one row per backend with wall time, the protocol's blocked
+    read-wait, delivered chunk bytes, the derived chunk-read throughput,
+    and the parallel backend's readahead counters. ``latency_ms`` is the
+    emulated per-chunk-read storage head time (NAS profile; 0 to disable —
+    but then local page-cached reads are memcpys and there is no storage
+    stall left for any backend to hide).
+    """
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="redox_bench_") as tmp:
+        root = Path(tmp) / "chunks"
+        _build_bench_store(
+            root, num_docs=num_docs, mean_tokens=mean_tokens,
+            chunk_size=chunk_size, groups=groups, seed=seed,
+        )
+        for name in backends:
+            store = ChunkStore.open(
+                root, backend=_bench_backend(name, latency_ms / 1e3)
+            )
+            cluster = Cluster(store.plan, nodes, store=store, seed=seed + 2)
+            sampler = EpochSampler(store.plan.num_files, nodes, seed=seed + 3)
+            loader = RedoxLoader(
+                cluster, sampler, batch_per_node=batch_per_node,
+                seq_len=seq_len, queue_depth=queue_depth,
+            )
+            t0 = time.perf_counter()
+            steps = sum(1 for _ in loader.epoch_async(0))
+            wall = time.perf_counter() - t0
+            agg = cluster.nodes[0].stats
+            for n in cluster.nodes[1:]:
+                agg = agg.merge(n.stats)
+            b = store.backend_stats
+            rows.append(dict(
+                backend=name, steps=steps, wall_s=wall,
+                read_wait_s=agg.read_wait_s,
+                disk_mb=agg.disk_bytes / 1e6,
+                throughput_mbs=agg.read_throughput / 1e6,
+                chunk_loads=agg.chunk_loads,
+                prefetch_hits=b.prefetch_hits,
+                peak_inflight=b.peak_inflight,
+            ))
+            store.close()
+    return rows
+
+
+def print_backend_table(rows: list[dict]) -> None:
+    print(
+        f"{'backend':9s} {'steps':>5s} {'wall_s':>7s} {'read_wait_s':>11s} "
+        f"{'disk_MB':>8s} {'MB/s':>8s} {'loads':>6s} {'ra_hits':>7s} {'inflight':>8s}"
+    )
+    for r in rows:
+        print(
+            f"{r['backend']:9s} {r['steps']:5d} {r['wall_s']:7.2f} "
+            f"{r['read_wait_s']:11.4f} {r['disk_mb']:8.1f} "
+            f"{r['throughput_mbs']:8.1f} {r['chunk_loads']:6d} "
+            f"{r['prefetch_hits']:7d} {r['peak_inflight']:8d}"
+        )
 
 
 def run_scenario(scn: Scenario, loaders=("pytorch", "coordl", "redox", "no_io")):

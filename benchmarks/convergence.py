@@ -21,7 +21,7 @@ import jax
 
 from repro.configs import ARCHS, RunConfig, reduced
 from repro.core import Cluster, EpochSampler, RedoxLoader
-from repro.data import SyntheticTokenDataset, decode_record
+from repro.data import SyntheticTokenDataset
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.train.train_step import build_train_step, init_train_state

@@ -1,16 +1,53 @@
-"""Paper Table 1: I/O overhead percentage of epoch time (PyTorch loader).
+"""Paper Table 1 + per-backend chunk-read throughput.
 
-Reproduces the motivating measurement: train three CV models on
-ImageNet-1k (P100 profile, 3 nodes) with the native per-file loader and
+Default mode reproduces the motivating measurement: train three CV models
+on ImageNet-1k (P100 profile, 3 nodes) with the native per-file loader and
 report epoch time, I/O-only time, and overhead percentage.
+
+``--backend {vfs,mmap,parallel,all}`` instead runs a *real-bytes* epoch
+(an actual on-disk chunk store served through ``RedoxLoader.epoch_async``)
+once per storage backend and reports observed chunk-read throughput —
+bytes batched in per second the protocol spent blocked on storage. The
+parallel backend's readahead overlaps chunk reads with decode/assembly,
+so it beats vfs on any multi-chunk epoch with real storage latency
+(``--latency-ms`` emulates the NAS per-op head time of calibration.py).
+
+    PYTHONPATH=src python benchmarks/io_overhead.py --backend all
 """
 
 from __future__ import annotations
 
-from .calibration import Scenario
-from .common import run_scenario
+import argparse
+
+try:
+    from .calibration import Scenario
+    from .common import (
+        BACKEND_NAMES,
+        backend_report,
+        expand_backends,
+        print_backend_table,
+        run_scenario,
+    )
+except ImportError:  # executed as a script: python benchmarks/io_overhead.py
+    import sys
+    from pathlib import Path
+
+    _ROOT = Path(__file__).resolve().parent.parent
+    for _p in (str(_ROOT), str(_ROOT / "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    from benchmarks.calibration import Scenario
+    from benchmarks.common import (
+        BACKEND_NAMES,
+        backend_report,
+        expand_backends,
+        print_backend_table,
+        run_scenario,
+    )
 
 PAPER = {"squeezenet": 91, "mobilenetv3": 82, "resnet50": 65}
+
+BACKEND_CHOICES = BACKEND_NAMES + ("all",)
 
 
 def run() -> list[tuple]:
@@ -27,7 +64,28 @@ def run() -> list[tuple]:
     return rows
 
 
-def main():
+def run_backends(backend: str, latency_ms: float = 2.0) -> list[dict]:
+    return backend_report(expand_backends(backend), latency_ms=latency_ms)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--backend", choices=BACKEND_CHOICES, default=None,
+        help="run the real-bytes per-backend throughput benchmark instead",
+    )
+    ap.add_argument(
+        "--latency-ms", type=float, default=2.0,
+        help="emulated per-chunk-read storage head latency (NAS profile)",
+    )
+    args = ap.parse_args(argv)
+    if args.backend:
+        print(
+            f"Per-backend chunk-read throughput (real bytes, epoch_async, "
+            f"latency={args.latency_ms:g} ms/op)"
+        )
+        print_backend_table(run_backends(args.backend, args.latency_ms))
+        return
     print("Table 1 — I/O overhead (PyTorch loader, ImageNet-1k-scaled, 3xP100)")
     print(f"{'model':14s} {'epoch_s':>9s} {'compute_s':>9s} {'io_pct':>7s} {'paper':>6s}")
     for _, model, t, c, pct, paper in run():

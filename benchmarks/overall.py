@@ -10,8 +10,16 @@ Paper headline: Redox up to 4.57x vs PyTorch, up to 1.96x vs CoorDL.
 
 from __future__ import annotations
 
+import argparse
+
 from .calibration import Scenario
-from .common import run_scenario
+from .common import (
+    BACKEND_NAMES,
+    backend_report,
+    expand_backends,
+    print_backend_table,
+    run_scenario,
+)
 
 SCENARIOS = [
     # (figure, dataset, hw, model, nodes)
@@ -50,7 +58,7 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, backend: str | None = None):
     print("Figs 9-11 — overall epoch time (scaled datasets; ratios comparable to paper)")
     hdr = f"{'fig':7s} {'model':12s} {'hw':5s} {'n':>2s} {'pytorch':>9s} {'coordl':>9s} {'redox':>9s} {'no_io':>9s} {'xPT':>6s} {'xCDL':>6s}"
     print(hdr)
@@ -60,7 +68,14 @@ def main(quick: bool = False):
             f"{r['pytorch_s']:9.1f} {r['coordl_s']:9.1f} {r['redox_s']:9.1f} "
             f"{r['no_io_s']:9.1f} {r['speedup_vs_pytorch']:6.2f} {r['speedup_vs_coordl']:6.2f}"
         )
+    if backend:
+        print("\nPer-backend chunk-read throughput (real bytes, epoch_async)")
+        print_backend_table(backend_report(expand_backends(backend)))
 
 
 if __name__ == "__main__":
-    main()
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--quick", action="store_true")
+    _ap.add_argument("--backend", choices=BACKEND_NAMES + ("all",), default=None)
+    _args = _ap.parse_args()
+    main(quick=_args.quick, backend=_args.backend)

@@ -8,7 +8,6 @@ CSV summary at the end.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -29,7 +28,11 @@ def main() -> None:
         fn()
         csv_rows.append((title.split(" ")[0], f"{time.time()-t0:.1f}s"))
 
-    section("Table 1: I/O overhead", io_overhead.main)
+    section("Table 1: I/O overhead", lambda: io_overhead.main([]))
+    section(
+        "Storage backends: chunk-read throughput",
+        lambda: io_overhead.main(["--backend", "all"]),
+    )
     section("Figs 9-11: overall speedups", lambda: overall.main(quick=args.quick))
     section("Tables 4+5: ablation breakdown", breakdown.main)
     if not args.quick:

@@ -9,8 +9,6 @@ PyTorch/CoorDL baselines.
     PYTHONPATH=src python examples/distributed_io_demo.py
 """
 
-import numpy as np
-
 from repro.core import (
     ChunkingPlan,
     Cluster,

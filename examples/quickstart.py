@@ -9,9 +9,7 @@ asked for vs what Redox returned, and the exactly-once guarantee holding.
 
 import tempfile
 
-import numpy as np
-
-from repro.core import Cluster, EpochSampler, RedoxLoader
+from repro.core import ChunkStore, Cluster, EpochSampler, RedoxLoader
 from repro.data import SyntheticTokenDataset
 
 
@@ -51,12 +49,18 @@ def main():
         print(f"chunk loads: {st.chunk_loads}, mean fill rate: "
               f"{st.mean_fill_rate:.2f}, prefetch hits: {st.remote_prefetch_hits}")
 
-        # 4. the training-facing API: fixed-shape JAX batches
-        cluster2 = Cluster(plan, 3, store=store, seed=2)
+        # 4. the training-facing API: fixed-shape JAX batches, served through
+        #    a pluggable storage backend (vfs | mmap | parallel)
+        store2 = ChunkStore.open(tmp, backend="parallel")
+        cluster2 = Cluster(plan, 3, store=store2, seed=2)
         loader = RedoxLoader(cluster2, sampler, batch_per_node=8, seq_len=64)
         batch = next(iter(loader.epoch(1)))
         print(f"\nRedoxLoader batch: tokens{batch['tokens'].shape} "
               f"targets{batch['targets'].shape} mask sum={batch['loss_mask'].sum():.0f}")
+        bs = store2.backend_stats
+        print(f"storage backend '{store2.backend.name}': {bs.chunk_reads} chunk reads, "
+              f"{bs.prefetch_hits} served by readahead")
+        store2.close()
 
 
 if __name__ == "__main__":

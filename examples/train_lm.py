@@ -45,6 +45,8 @@ def main():
     ap.add_argument("--nodes", type=int, default=2)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--workdir", default=None)
+    ap.add_argument("--backend", default="vfs", choices=("vfs", "mmap", "parallel"),
+                    help="storage backend serving chunk reads")
     args = ap.parse_args()
 
     p = PRESETS[args.preset]
@@ -60,7 +62,9 @@ def main():
     # --- data: real chunk store on disk, Redox cluster, loader -------------
     ds = SyntheticTokenDataset(p["num_docs"], cfg.vocab_size, mean_len=p["seq"] // 2, seed=5)
     store = ds.build_store(workdir / "chunks", chunk_size=16,
-                           memory_bytes=ds.sizes_bytes.sum() // 4, seed=1)
+                           memory_bytes=ds.sizes_bytes.sum() // 4, seed=1,
+                           backend=args.backend)
+    print(f"storage backend: {store.backend.name}")
     cluster = Cluster(store.plan, args.nodes, store=store, seed=2,
                       remote_memory_limit_bytes=1_000_000)
     sampler = EpochSampler(p["num_docs"], args.nodes, seed=3)

@@ -9,7 +9,6 @@ them by name through :func:`repro.configs.registry`.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 __all__ = ["ModelConfig", "ShapeConfig", "RunConfig"]
 

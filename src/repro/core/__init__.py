@@ -8,10 +8,21 @@ from .loader import RedoxLoader
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
 from .stats import NodeStats, PipelineTimeModel, StepIO
-from .storage import ChunkStore
+from .storage import (
+    BACKENDS,
+    BackendStats,
+    ChunkStore,
+    MmapBackend,
+    ParallelBackend,
+    StorageBackend,
+    VFSBackend,
+    make_backend,
+)
 
 __all__ = [
     "AbstractMemory",
+    "BACKENDS",
+    "BackendStats",
     "ChunkingPlan",
     "ChunkStore",
     "Cluster",
@@ -19,8 +30,10 @@ __all__ = [
     "EpochResult",
     "EpochSampler",
     "LocalNode",
+    "MmapBackend",
     "NoIOLoader",
     "NodeStats",
+    "ParallelBackend",
     "PipelineTimeModel",
     "PyTorchStyleLoader",
     "RedoxLoader",
@@ -28,4 +41,7 @@ __all__ = [
     "RequestResult",
     "run_baseline_epoch",
     "StepIO",
+    "StorageBackend",
+    "VFSBackend",
+    "make_backend",
 ]

@@ -149,6 +149,24 @@ class Cluster:
         self._loc_positions: list[dict[int, np.ndarray]] | None = None
         self.failed = np.zeros(num_nodes, dtype=bool)
 
+    @property
+    def store(self):
+        """The shared ChunkStore (None in simulation-only mode)."""
+        return self.nodes[0].store if self.nodes else None
+
+    @property
+    def backend_stats(self):
+        """Aggregate storage-backend counters, or None without a store.
+
+        All LocalNodes share one store/backend instance (one disk per node is
+        modelled by the time model, not by separate backends), so this is the
+        cluster-wide view: prefetch hits, peak in-flight reads, and the
+        blocking-read throughput that ``benchmarks/io_overhead.py --backend``
+        reports per backend.
+        """
+        store = self.store
+        return store.backend_stats if store is not None else None
+
     # ------------------------------------------------------------ lifecycle
     def begin_epoch(self, sampler: EpochSampler, epoch: int) -> list[np.ndarray]:
         for node in self.nodes:

@@ -11,15 +11,17 @@ mask (documents are clipped/padded — standard LM practice), so the jitted
 train step never recompiles.
 
 Straggler mitigation (DESIGN.md §5): an optional background prefetch queue
-(`queue_depth`) assembles batches ahead of consumption on a worker thread —
-a slow chunk read or remote round trip only stalls training once the queue
-drains, mirroring the paper's client/server split where clients hide server
-latency.
+(`queue_depth`) runs the protocol walk (and its storage reads) ahead of
+consumption on a worker thread, while decode + grid assembly happen on the
+consumer side at ``__next__`` time — a two-stage pipeline. With a parallel
+storage backend the chunk reads themselves also overlap (protocol hints →
+bounded readahead), so a slow chunk read or remote round trip only stalls
+training once the queue drains, mirroring the paper's client/server split
+where clients hide server latency.
 """
 
 from __future__ import annotations
 
-import math
 import queue
 import threading
 
@@ -77,17 +79,27 @@ class RedoxLoader:
     # ------------------------------------------------------------- epochs
     def epoch(self, epoch: int):
         """Yield GlobalBatch objects; runs protocol inline (deterministic)."""
-        yield from self._produce(epoch)
+        for payloads, step, io_by_node in self._produce(epoch):
+            yield self._assemble(payloads, step, io_by_node)
 
     def epoch_async(self, epoch: int):
-        """Same batches, assembled ahead of time on a worker thread."""
+        """Same batches, two-stage pipeline (double-buffered).
+
+        Stage 1 (worker thread): protocol walk + chunk reads — with a
+        parallel backend these are themselves overlapped via readahead.
+        Stage 2 (this thread): record decode + ``_to_grid`` assembly,
+        running while the worker's next reads are in flight.
+        """
         q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
         stop = object()
+        failure: list[BaseException] = []
 
         def worker():
             try:
                 for item in self._produce(epoch):
                     q.put(item)
+            except BaseException as e:  # re-raised on the consumer side
+                failure.append(e)
             finally:
                 q.put(stop)
 
@@ -97,37 +109,44 @@ class RedoxLoader:
             item = q.get()
             if item is stop:
                 break
-            yield item
+            yield self._assemble(*item)
         t.join()
+        if failure:
+            # A failed protocol walk or storage read must not end the epoch
+            # cleanly — the consumer would silently train on a short epoch.
+            raise failure[0]
 
     # ------------------------------------------------------------ internals
+    def _assemble(self, payloads, step: int, io_by_node: dict[int, StepIO]):
+        """Decode raw record payloads and pack the fixed-shape grid."""
+        flat = [decode_record(p) for p in payloads]
+        tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
+        return GlobalBatch(
+            tokens=tokens[:, :-1],
+            targets=tokens[:, 1:],
+            loss_mask=mask[:, 1:],
+            step=step,
+            io_by_node=io_by_node,
+        )
+
     def _produce(self, epoch: int):
+        """Walk the protocol; yield (raw payloads, step, io) per step."""
         cluster, sampler = self.cluster, self.sampler
         seqs = cluster.begin_epoch(sampler, epoch)
         num_nodes = cluster.num_nodes
         steps = min(len(s) for s in seqs) // self.batch_per_node
         for step in range(steps):
             io_by_node: dict[int, StepIO] = {}
-            per_node: list[list[np.ndarray]] = []
+            payloads: list = []
             for r in range(num_nodes):
-                recs = []
                 lo = step * self.batch_per_node
                 for pos in range(lo, lo + self.batch_per_node):
                     fid, data = cluster.access(r, pos, int(seqs[r][pos]), io_by_node)
                     assert data is not None, (
                         "RedoxLoader requires a Cluster built with a ChunkStore"
                     )
-                    recs.append(decode_record(data))
-                per_node.append(recs)
-            flat = [rec for recs in per_node for rec in recs]
-            tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
-            yield GlobalBatch(
-                tokens=tokens[:, :-1],
-                targets=tokens[:, 1:],
-                loss_mask=mask[:, 1:],
-                step=step,
-                io_by_node=io_by_node,
-            )
+                    payloads.append(data)
+            yield payloads, step, io_by_node
         # Drain the ragged tail so the exactly-once epoch invariants hold.
         io_by_node = {}
         for r in range(num_nodes):

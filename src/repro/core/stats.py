@@ -33,12 +33,19 @@ class NodeStats:
     net_messages: int = 0
 
     fill_rate_num: float = 0.0     # sum of fill_rate over chunk loads
+    read_wait_s: float = 0.0       # wall time blocked on storage chunk reads
     peak_local_bytes: int = 0
     peak_remote_bytes: int = 0
+    peak_inflight_reads: int = 0   # backend's max concurrent background reads
 
     @property
     def mean_fill_rate(self) -> float:
         return self.fill_rate_num / self.chunk_loads if self.chunk_loads else 1.0
+
+    @property
+    def read_throughput(self) -> float:
+        """Observed chunk-read throughput: bytes batched in per blocked second."""
+        return self.disk_bytes / self.read_wait_s if self.read_wait_s > 0 else 0.0
 
     def merge(self, other: "NodeStats") -> "NodeStats":
         out = NodeStats()
@@ -60,6 +67,7 @@ class StepIO:
     file_reads: int = 0   # per-file reads (baselines only; Redox never does these)
     net_messages: int = 0
     net_bytes: int = 0
+    read_wait_s: float = 0.0  # *measured* storage stall (real-bytes runs only)
 
     def add(self, other: "StepIO") -> None:
         self.chunk_loads += other.chunk_loads
@@ -67,6 +75,7 @@ class StepIO:
         self.file_reads += other.file_reads
         self.net_messages += other.net_messages
         self.net_bytes += other.net_bytes
+        self.read_wait_s += other.read_wait_s
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,34 @@
+"""Pluggable storage: one chunk layout, three ways to read it.
+
+``ChunkStore`` owns the on-disk chunk layout (paper §3.2); a
+:class:`StorageBackend` decides how bytes are fetched:
+
+========  =====================================================  ==========
+backend   mechanism                                              returns
+========  =====================================================  ==========
+vfs       ``open``/``pread`` with a descriptor cache (default)   ``bytes``
+mmap      files mapped once; reads are zero-copy views           ``memoryview``
+parallel  threadpool reads + bounded readahead over an inner
+          backend, driven by protocol prefetch hints             inner's type
+========  =====================================================  ==========
+
+Select one with ``ChunkStore.open(root, backend="mmap")`` or pass an
+instance for custom tuning (``ParallelBackend(workers=8, readahead=16)``).
+"""
+
+from .base import BackendStats, StorageBackend
+from .mapped import MmapBackend
+from .parallel import ParallelBackend
+from .store import BACKENDS, ChunkStore, make_backend
+from .vfs import VFSBackend
+
+__all__ = [
+    "BACKENDS",
+    "BackendStats",
+    "ChunkStore",
+    "MmapBackend",
+    "ParallelBackend",
+    "StorageBackend",
+    "VFSBackend",
+    "make_backend",
+]

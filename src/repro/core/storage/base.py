@@ -1,0 +1,82 @@
+"""Storage backend interface: how chunk bytes reach the protocol.
+
+The paper's claim is storage-agnostic ("it does not depend on any specific
+storage"); this ABC makes that concrete. A backend maps *paths* to buffers —
+it knows nothing about chunks, plans, or the protocol. :class:`ChunkStore`
+owns the chunk-id -> path translation and the offset index.
+
+Three access patterns, mirroring how training actually touches storage:
+
+* :meth:`StorageBackend.read` — one whole-file batched read (the Redox
+  chunk-load path);
+* :meth:`StorageBackend.read_range` — a ranged read of one record (the
+  per-file baseline path);
+* :meth:`StorageBackend.prefetch` — a non-binding hint that the given paths
+  will likely be read soon. Synchronous backends ignore it; the parallel
+  backend turns it into bounded readahead so chunk loads overlap with
+  protocol work and batch assembly.
+
+Every backend keeps a :class:`BackendStats` so benchmarks can report
+observed chunk-read throughput (bytes delivered per second the *caller*
+spent blocked) per backend.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from pathlib import Path
+
+__all__ = ["BackendStats", "StorageBackend"]
+
+
+@dataclasses.dataclass
+class BackendStats:
+    """Counters shared by all backends (times in seconds)."""
+
+    chunk_reads: int = 0       # whole-file read() calls served
+    ranged_reads: int = 0      # read_range() calls served
+    bytes_read: int = 0        # payload bytes handed to callers
+    file_opens: int = 0        # OS-level open()/mmap() operations
+    wait_seconds: float = 0.0  # time callers spent blocked inside read()
+    prefetch_issued: int = 0   # readahead reads actually submitted
+    prefetch_hits: int = 0     # read() calls served by an earlier prefetch
+    peak_inflight: int = 0     # max concurrent background reads observed
+
+    def throughput(self) -> float:
+        """Observed blocking-read throughput (bytes/s of caller wait time)."""
+        return self.bytes_read / self.wait_seconds if self.wait_seconds > 0 else 0.0
+
+
+class StorageBackend(abc.ABC):
+    """One way of turning a path into bytes. Stateless w.r.t. the protocol."""
+
+    name: str = "abstract"
+    #: True when prefetch() actually consumes hints — lets callers skip
+    #: computing hint lists for synchronous backends entirely.
+    wants_prefetch: bool = False
+
+    def __init__(self) -> None:
+        self.stats = BackendStats()
+
+    # ------------------------------------------------------------- required
+    @abc.abstractmethod
+    def read(self, path: Path) -> "bytes | memoryview":
+        """Read the whole file at ``path`` (one batched request)."""
+
+    @abc.abstractmethod
+    def read_range(self, path: Path, offset: int, length: int) -> "bytes | memoryview":
+        """Read ``length`` bytes at ``offset`` of ``path``."""
+
+    # ------------------------------------------------------------- optional
+    def prefetch(self, paths: "list[Path]") -> None:
+        """Hint that ``paths`` will be read soon. Default: no-op."""
+
+    def close(self) -> None:
+        """Release cached handles/maps/threads. Safe to call twice."""
+
+    def __enter__(self) -> "StorageBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

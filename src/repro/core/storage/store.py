@@ -1,0 +1,167 @@
+"""Chunk store: the on-disk batched layout (paper §3.2 "Data Chunk Generation").
+
+A chunk is one file on disk: the concatenation of its member records, plus a
+sidecar offset index. This is the paper's one-time dataset re-organisation
+("the pre-organized data chunks can be re-used to train different models").
+Reads happen at two granularities:
+
+* ``read_chunk``  — one sequential read of the whole chunk (Redox path);
+* ``read_file``   — a ranged read of one record (baseline path — models
+  PyTorch's per-file access against the same bytes).
+
+*How* bytes are read is delegated to a :class:`StorageBackend`
+(``backend="vfs" | "mmap" | "parallel"``, or an instance) — see
+``base.py``. The layout itself stays storage-agnostic, like the paper's
+implementation: "it does not depend on any specific storage".
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from ..chunking import ChunkingPlan
+from .base import BackendStats, StorageBackend
+from .mapped import MmapBackend
+from .parallel import ParallelBackend
+from .vfs import VFSBackend
+
+__all__ = ["ChunkStore", "BACKENDS", "make_backend"]
+
+BACKENDS = {
+    "vfs": VFSBackend,
+    "mmap": MmapBackend,
+    "parallel": ParallelBackend,
+}
+
+
+def make_backend(spec: "str | StorageBackend", **kwargs) -> StorageBackend:
+    """Factory: a backend name (``BACKENDS`` key) or a ready instance."""
+    if isinstance(spec, StorageBackend):
+        return spec
+    try:
+        cls = BACKENDS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage backend {spec!r}; expected one of {sorted(BACKENDS)}"
+        ) from None
+    return cls(**kwargs)
+
+
+class ChunkStore:
+    """Directory of chunk files + offset indexes for one dataset."""
+
+    def __init__(
+        self,
+        root: str | Path,
+        plan: ChunkingPlan,
+        *,
+        backend: "str | StorageBackend" = "vfs",
+    ):
+        self.root = Path(root)
+        self.plan = plan
+        self._offsets: dict[int, np.ndarray] | None = None
+        self._backend = make_backend(backend)
+
+    # ------------------------------------------------------------- backend
+    @property
+    def backend(self) -> StorageBackend:
+        return self._backend
+
+    @property
+    def backend_stats(self) -> BackendStats:
+        return self._backend.stats
+
+    def chunk_path(self, chunk: int) -> Path:
+        return self.root / f"chunk_{chunk:08d}.bin"
+
+    @property
+    def wants_prefetch(self) -> bool:
+        """Whether computing prefetch hints for this store is worthwhile."""
+        return self._backend.wants_prefetch
+
+    def prefetch_chunks(self, chunks: "list[int]") -> None:
+        """Hint upcoming chunk loads to the backend (bounded readahead)."""
+        if chunks and self._backend.wants_prefetch:
+            self._backend.prefetch([self.chunk_path(k) for k in chunks])
+
+    def close(self) -> None:
+        self._backend.close()
+
+    # -------------------------------------------------------------- writing
+    @staticmethod
+    def build(
+        root: str | Path,
+        plan: ChunkingPlan,
+        records,
+        *,
+        backend: "str | StorageBackend" = "vfs",
+    ) -> "ChunkStore":
+        """One-time chunk-file generation (paper Fig. 2a).
+
+        ``records`` is anything indexable by file id returning the record
+        bytes (a list, or a provider like ``SyntheticTokenDataset``).
+        """
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        offsets = {}
+        for k in range(plan.num_chunks):
+            files = plan.files_in_chunk(k)
+            blobs = [records[int(f)] for f in files]
+            sizes = np.array([len(b) for b in blobs], dtype=np.int64)
+            if not np.array_equal(sizes, plan.file_sizes[files]):
+                raise ValueError(f"record sizes disagree with plan for chunk {k}")
+            offs = np.zeros(len(blobs) + 1, dtype=np.int64)
+            np.cumsum(sizes, out=offs[1:])
+            with open(root / f"chunk_{k:08d}.bin", "wb") as fh:
+                for b in blobs:
+                    fh.write(b)
+            offsets[k] = offs
+        index = {
+            str(k): [int(x) for x in offs] for k, offs in offsets.items()
+        }
+        (root / "index.json").write_text(json.dumps(index))
+        plan.save(root / "plan.npz")
+        store = ChunkStore(root, plan, backend=backend)
+        store._offsets = {int(k): np.asarray(v) for k, v in index.items()}
+        return store
+
+    # -------------------------------------------------------------- reading
+    def _index(self) -> dict[int, np.ndarray]:
+        if self._offsets is None:
+            raw = json.loads((self.root / "index.json").read_text())
+            self._offsets = {int(k): np.asarray(v, dtype=np.int64) for k, v in raw.items()}
+        return self._offsets
+
+    def read_chunk(self, chunk: int) -> "list[tuple[int, bytes | memoryview]]":
+        """One batched read -> [(file_id, record_bytes), ...] in slot order."""
+        offs = self._index()[chunk]
+        files = self.plan.files_in_chunk(chunk)
+        blob = self._backend.read(self.chunk_path(chunk))
+        return [
+            (int(f), blob[offs[j] : offs[j + 1]]) for j, f in enumerate(files)
+        ]
+
+    def read_file(self, file_id: int) -> "bytes | memoryview":
+        """Ranged read of a single record (baseline access pattern).
+
+        Offsets come from the cached index and the backend reuses its open
+        handle for the chunk file, so repeated calls cost one ``pread`` —
+        not an ``open`` + index parse per record.
+        """
+        k = int(self.plan.chunk_of[file_id])
+        j = int(self.plan.slot_of[file_id])
+        offs = self._index()[k]
+        return self._backend.read_range(
+            self.chunk_path(k), int(offs[j]), int(offs[j + 1] - offs[j])
+        )
+
+    @staticmethod
+    def open(
+        root: str | Path, *, backend: "str | StorageBackend" = "vfs"
+    ) -> "ChunkStore":
+        root = Path(root)
+        plan = ChunkingPlan.load(root / "plan.npz")
+        return ChunkStore(root, plan, backend=backend)

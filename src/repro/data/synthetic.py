@@ -79,10 +79,10 @@ class SyntheticTokenDataset:
 
     def build_store(
         self, root, chunk_size: int, *, num_slots: int | None = None,
-        memory_bytes: int | None = None, seed: int = 0,
+        memory_bytes: int | None = None, seed: int = 0, backend="vfs",
     ) -> ChunkStore:
         plan = ChunkingPlan.create(
             self.sizes_bytes, chunk_size,
             num_slots=num_slots, memory_bytes=memory_bytes, seed=seed,
         )
-        return ChunkStore.build(root, plan, self)
+        return ChunkStore.build(root, plan, self, backend=backend)

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_fwd
-from .ref import attention_ref
 
 __all__ = ["flash_attention", "flash_attention_gqa"]
 

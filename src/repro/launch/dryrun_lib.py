@@ -17,13 +17,11 @@ sets XLA_FLAGS before any jax import; tests use small emulated meshes).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import RunConfig, cell_status, get_config, get_shape
 from ..models import build_model, split_params
@@ -316,6 +314,8 @@ def run_cell(
 
     compile_s = time.time() - t0
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     memory = {
         k: float(getattr(mem, k, 0.0))

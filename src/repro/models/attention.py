@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..parallel.axes import shard
-from .common import Param, apply_rope, make_rope, rms_norm, scaled_init
+from .common import Param, apply_rope, make_rope, scaled_init
 
 __all__ = ["init_attention", "attention_block", "decode_attention_block"]
 

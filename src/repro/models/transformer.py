@@ -17,7 +17,6 @@ dicts for the recurrent kinds.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..parallel.axes import shard
 from .attention import attention_block, decode_attention_block, init_attention
-from .common import Param, RngStream, rms_norm, split_params
+from .common import Param, RngStream, rms_norm
 from .mamba2 import init_mamba2, mamba2_block, mamba2_decode, mamba2_state_shape
 from .mlp import init_mlp, mlp_block
 from .moe import init_moe, moe_block, moe_block_a2a

@@ -14,7 +14,6 @@ tensors (row/col means) — the only optimizer whose state fits kimi-k2-1t on
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

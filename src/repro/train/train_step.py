@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, RunConfig
+from ..configs.base import RunConfig
 from ..models.transformer import Model
 from ..optim.optimizers import Optimizer, clip_by_global_norm
 from .losses import lm_loss

@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.ckpt import (
     AsyncCheckpointer,
@@ -109,7 +108,7 @@ class TestFaultTolerance:
         """End-to-end: training from the Redox loader survives a data-node
         failure mid-epoch (ownership remap) AND a trainer restart from the
         checkpoint; every record is still consumed exactly once."""
-        from repro.core import ChunkingPlan, Cluster, EpochSampler
+        from repro.core import Cluster, EpochSampler
         from repro.data import SyntheticTokenDataset
 
         ds = SyntheticTokenDataset(240, vocab_size=97, mean_len=48, seed=5)

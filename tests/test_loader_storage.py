@@ -1,8 +1,9 @@
 """ChunkStore round-trips and the RedoxLoader → JAX bridge."""
 
 import numpy as np
+import pytest
 
-from repro.core import ChunkingPlan, ChunkStore, Cluster, EpochSampler, RedoxLoader
+from repro.core import ChunkStore, Cluster, EpochSampler, RedoxLoader
 from repro.data import SyntheticTokenDataset, decode_record
 
 
@@ -35,6 +36,22 @@ class TestChunkStore:
         back = ChunkStore.open(store.root)
         assert back.plan.num_files == store.plan.num_files
         assert back.read_file(5) == store.read_file(5)
+
+    def test_read_file_reuses_handles(self, tmp_path):
+        """Regression: ranged reads must not re-open the chunk file (or
+        re-parse the index) per call — handles are cached in the backend."""
+        ds, store, _, _ = build_dataset(tmp_path)
+        fids = list(range(0, store.plan.num_files, 3))
+        for fid in fids:
+            store.read_file(fid)
+        opens = store.backend_stats.file_opens
+        # At most one open per distinct chunk file, never one per record.
+        touched = len({int(store.plan.chunk_of[f]) for f in fids})
+        assert opens <= touched
+        for fid in fids:  # second pass: every handle already cached
+            store.read_file(fid)
+        assert store.backend_stats.file_opens == opens
+        assert store.backend_stats.ranged_reads == 2 * len(fids)
 
 
 class TestRedoxLoader:
@@ -78,6 +95,25 @@ class TestRedoxLoader:
         batches = list(loader.epoch(0))
         for b in batches:
             assert b["tokens"].shape == (24, 32)  # 3 nodes x 8
+
+    def test_async_loader_propagates_worker_errors(self, tmp_path):
+        """Regression: a failed storage read inside the worker thread must
+        surface to the consumer, not end the epoch cleanly/short."""
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(cluster, sampler, batch_per_node=16, seq_len=32)
+        calls = {"n": 0}
+        real = store.read_chunk
+
+        def flaky(chunk):
+            calls["n"] += 1
+            if calls["n"] > 3:
+                raise OSError("injected storage failure")
+            return real(chunk)
+
+        store.read_chunk = flaky
+        with pytest.raises(OSError, match="injected storage failure"):
+            for _ in loader.epoch_async(0):
+                pass
 
     def test_async_loader_same_order(self, tmp_path):
         ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)

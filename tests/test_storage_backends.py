@@ -1,0 +1,185 @@
+"""Storage-backend matrix: vfs / mmap / parallel serve identical bytes,
+and the parallel pipeline preserves the exactly-once epoch invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkStore,
+    Cluster,
+    EpochSampler,
+    LocalNode,
+    ParallelBackend,
+    RedoxLoader,
+    VFSBackend,
+    make_backend,
+)
+from repro.data import SyntheticTokenDataset
+
+pytestmark = pytest.mark.backend
+
+BACKENDS = ["vfs", "mmap", "parallel"]
+
+
+@pytest.fixture(scope="module")
+def store_dir(tmp_path_factory):
+    root = tmp_path_factory.mktemp("chunks")
+    ds = SyntheticTokenDataset(192, vocab_size=97, mean_len=48, seed=3)
+    store = ds.build_store(root, chunk_size=4, num_slots=16, seed=1)
+    return root, store.plan
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+class TestByteEquivalence:
+    def test_chunks_identical(self, store_dir, backend):
+        root, plan = store_dir
+        ref = ChunkStore.open(root)  # vfs reference
+        other = ChunkStore.open(root, backend=backend)
+        for k in range(plan.num_chunks):
+            a = ref.read_chunk(k)
+            b = other.read_chunk(k)
+            assert [f for f, _ in a] == [f for f, _ in b]
+            for (_, x), (_, y) in zip(a, b):
+                assert bytes(x) == bytes(y)
+        ref.close()
+        other.close()
+
+    def test_records_identical(self, store_dir, backend):
+        root, plan = store_dir
+        ref = ChunkStore.open(root)
+        other = ChunkStore.open(root, backend=backend)
+        for fid in range(0, plan.num_files, 7):
+            assert bytes(ref.read_file(fid)) == bytes(other.read_file(fid))
+        ref.close()
+        other.close()
+
+    def test_chunk_and_ranged_reads_agree(self, store_dir, backend):
+        root, plan = store_dir
+        store = ChunkStore.open(root, backend=backend)
+        for k in (0, plan.num_chunks // 2, plan.num_chunks - 1):
+            for fid, blob in store.read_chunk(k):
+                assert bytes(store.read_file(fid)) == bytes(blob)
+        store.close()
+
+    def test_full_epoch_exactly_once(self, store_dir, backend):
+        root, plan = store_dir
+        store = ChunkStore.open(root, backend=backend)
+        node = LocalNode(plan, seed=9, store=store)
+        node.begin_epoch()
+        seq = EpochSampler(plan.num_files, 1, seed=11).global_sequence(0)
+        returned = [node.request(int(f)).file_id for f in seq]
+        assert sorted(returned) == list(range(plan.num_files))
+        assert node.epoch_complete()
+        store.close()
+
+
+class TestBackendSpecifics:
+    def test_factory_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown storage backend"):
+            make_backend("tape")
+
+    def test_factory_passes_instances_through(self):
+        be = VFSBackend(max_handles=3)
+        assert make_backend(be) is be
+
+    def test_mmap_reads_are_zero_copy_views(self, store_dir):
+        root, plan = store_dir
+        store = ChunkStore.open(root, backend="mmap")
+        for _, blob in store.read_chunk(0):
+            assert isinstance(blob, memoryview)
+        assert isinstance(store.read_file(0), memoryview)
+        store.close()
+
+    def test_parallel_prefetch_hits_and_bounded_inflight(self, store_dir):
+        root, plan = store_dir
+        be = ParallelBackend(workers=2, readahead=6)
+        store = ChunkStore.open(root, backend=be)
+        node = LocalNode(plan, seed=4, store=store)
+        node.begin_epoch()
+        for f in EpochSampler(plan.num_files, 1, seed=5).global_sequence(0):
+            node.request(int(f))
+        assert node.epoch_complete()
+        assert be.stats.prefetch_issued > 0
+        assert be.stats.prefetch_hits > 0
+        assert be.stats.peak_inflight <= 6
+        assert node.stats.peak_inflight_reads <= 6
+        assert node.stats.read_wait_s > 0
+        store.close()
+
+    def test_tiny_handle_cache_under_concurrency(self, store_dir):
+        """fd eviction must never close a descriptor a concurrent reader
+        holds: with max_handles=1 every read evicts the previous handle
+        while pool workers are mid-pread."""
+        root, plan = store_dir
+        be = ParallelBackend(VFSBackend(max_handles=1), workers=4, readahead=6)
+        store = ChunkStore.open(root, backend=be)
+        ref = ChunkStore.open(root)
+        for k in range(plan.num_chunks):
+            store.prefetch_chunks(list(range(k, min(k + 6, plan.num_chunks))))
+            a = store.read_chunk(k)
+            b = ref.read_chunk(k)
+            for (fa, xa), (fb, xb) in zip(a, b):
+                assert fa == fb and bytes(xa) == bytes(xb)
+        store.close()
+        ref.close()
+
+    def test_parallel_close_is_idempotent(self, store_dir):
+        root, _ = store_dir
+        store = ChunkStore.open(root, backend="parallel")
+        store.read_chunk(0)
+        store.close()
+        store.close()
+
+
+class TestParallelPipeline:
+    """Exactly-once + identical batches through the async loader pipeline."""
+
+    def _epoch_grids(self, root, backend, queue_depth, asynchronous):
+        store = ChunkStore.open(root, backend=backend)
+        cluster = Cluster(store.plan, 2, store=store, seed=6)
+        sampler = EpochSampler(store.plan.num_files, 2, seed=7)
+        loader = RedoxLoader(
+            cluster, sampler, batch_per_node=8, seq_len=32, queue_depth=queue_depth
+        )
+        it = loader.epoch_async(0) if asynchronous else loader.epoch(0)
+        grids = [b["tokens"].copy() for b in it]
+        # _produce ran _check_epoch_complete; re-assert the drained state here.
+        for node in cluster.nodes:
+            assert node.memory.is_empty()
+        store.close()
+        return grids
+
+    @pytest.mark.parametrize("queue_depth", [2, 4])
+    def test_exactly_once_under_queue_depth(self, store_dir, queue_depth):
+        root, _ = store_dir
+        ref = self._epoch_grids(root, "vfs", queue_depth=2, asynchronous=False)
+        par = self._epoch_grids(root, "parallel", queue_depth, asynchronous=True)
+        assert len(ref) == len(par)
+        for a, b in zip(ref, par):
+            np.testing.assert_array_equal(a, b)
+
+    def test_parallel_overlap_beats_vfs_with_latency(self, store_dir):
+        """With real per-op storage latency, readahead must cut the blocked
+        read-wait: every prefetched chunk is eventually re-loaded, so hits
+        convert whole sleeps into (near-)free claims."""
+        root, _ = store_dir
+        latency = 3e-3
+
+        def epoch_wait(backend):
+            store = ChunkStore.open(root, backend=backend)
+            node = LocalNode(store.plan, seed=8, store=store)
+            node.begin_epoch()
+            for f in EpochSampler(store.plan.num_files, 1, seed=9).global_sequence(0):
+                node.request(int(f))
+            wait = node.stats.read_wait_s
+            store.close()
+            return wait
+
+        vfs_wait = epoch_wait(VFSBackend(latency_s=latency))
+        par_wait = epoch_wait(
+            ParallelBackend(VFSBackend(latency_s=latency), workers=4, readahead=16)
+        )
+        assert par_wait < 0.9 * vfs_wait, (
+            f"parallel backend did not overlap reads: {par_wait:.3f}s vs "
+            f"vfs {vfs_wait:.3f}s"
+        )
