@@ -185,6 +185,9 @@ def backend_report(
                 disk_mb=agg.disk_bytes / 1e6,
                 throughput_mbs=agg.read_throughput / 1e6,
                 chunk_loads=agg.chunk_loads,
+                # loader epochs are planner-driven: readahead hits come from
+                # the exact schedule; heuristic hints are the fallback
+                sched_hits=b.scheduled_hits,
                 prefetch_hits=b.prefetch_hits,
                 peak_inflight=b.peak_inflight,
             ))
@@ -195,14 +198,15 @@ def backend_report(
 def print_backend_table(rows: list[dict]) -> None:
     print(
         f"{'backend':9s} {'steps':>5s} {'wall_s':>7s} {'read_wait_s':>11s} "
-        f"{'disk_MB':>8s} {'MB/s':>8s} {'loads':>6s} {'ra_hits':>7s} {'inflight':>8s}"
+        f"{'disk_MB':>8s} {'MB/s':>8s} {'loads':>6s} {'sched':>6s} "
+        f"{'ra_hits':>7s} {'inflight':>8s}"
     )
     for r in rows:
         print(
             f"{r['backend']:9s} {r['steps']:5d} {r['wall_s']:7.2f} "
             f"{r['read_wait_s']:11.4f} {r['disk_mb']:8.1f} "
             f"{r['throughput_mbs']:8.1f} {r['chunk_loads']:6d} "
-            f"{r['prefetch_hits']:7d} {r['peak_inflight']:8d}"
+            f"{r['sched_hits']:6d} {r['prefetch_hits']:7d} {r['peak_inflight']:8d}"
         )
 
 

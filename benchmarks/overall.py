@@ -58,16 +58,20 @@ def run(quick: bool = False) -> list[dict]:
     return rows
 
 
-def main(quick: bool = False, backend: str | None = None):
+def print_table(rows: list[dict]) -> None:
     print("Figs 9-11 — overall epoch time (scaled datasets; ratios comparable to paper)")
     hdr = f"{'fig':7s} {'model':12s} {'hw':5s} {'n':>2s} {'pytorch':>9s} {'coordl':>9s} {'redox':>9s} {'no_io':>9s} {'xPT':>6s} {'xCDL':>6s}"
     print(hdr)
-    for r in run(quick):
+    for r in rows:
         print(
             f"{r['fig']:7s} {r['model']:12s} {r['hw']:5s} {r['nodes']:2d} "
             f"{r['pytorch_s']:9.1f} {r['coordl_s']:9.1f} {r['redox_s']:9.1f} "
             f"{r['no_io_s']:9.1f} {r['speedup_vs_pytorch']:6.2f} {r['speedup_vs_coordl']:6.2f}"
         )
+
+
+def main(quick: bool = False, backend: str | None = None):
+    print_table(run(quick))
     if backend:
         print("\nPer-backend chunk-read throughput (real bytes, epoch_async)")
         print_backend_table(backend_report(expand_backends(backend)))

@@ -1,0 +1,92 @@
+"""Planner vs per-access epoch throughput on the `overall` scenario grid.
+
+For each scenario the same simulation-mode epoch is executed twice —
+through the reference per-access walk (``engine="per_access"``) and through
+the vectorized batched engine the clairvoyant planner runs on
+(``engine="step"``) — and the wall times are compared. Both engines are
+byte-identical (``tests/test_planner.py``), so the speedup is pure
+mechanics: id-space NumPy batching vs the per-file Python hot loop.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Cluster, EpochSampler
+
+from .calibration import Scenario
+from .overall import SCENARIOS
+
+
+def _epoch_wall(scn: Scenario, engine: str) -> tuple[float, int]:
+    plan = scn.plan()
+    cluster = Cluster(
+        plan,
+        scn.nodes,
+        remote_memory_limit_bytes=int(scn.remote_limit_scaled),
+        prefetch_window=512,
+        seed=scn.seed,
+    )
+    sampler = EpochSampler(plan.num_files, scn.nodes, seed=scn.seed + 1)
+    t0 = time.perf_counter()
+    res = cluster.run_epoch(
+        sampler, 0, scn.batch, collect_returned=False, engine=engine
+    )
+    return time.perf_counter() - t0, res.stats.accesses
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    scenarios = SCENARIOS[:4] if quick else SCENARIOS
+    for fig, ds, hw, model, nodes in scenarios:
+        scale = 100 if ds == "imagenet21k" else 20
+        scn = Scenario(ds, hw, model, nodes=nodes, scale=scale)
+        t_step, accesses = _epoch_wall(scn, "step")
+        t_pa, _ = _epoch_wall(scn, "per_access")
+        rows.append(
+            dict(
+                fig=fig, dataset=ds, hw=hw, model=model, nodes=nodes,
+                accesses=accesses,
+                per_access_s=t_pa, planner_s=t_step,
+                per_access_kacc_s=accesses / t_pa / 1e3,
+                planner_kacc_s=accesses / t_step / 1e3,
+                speedup=t_pa / t_step,
+            )
+        )
+    total_pa = sum(r["per_access_s"] for r in rows)
+    total_step = sum(r["planner_s"] for r in rows)
+    rows.append(
+        dict(
+            fig="grid", dataset="aggregate", hw="-", model="-", nodes=0,
+            accesses=sum(r["accesses"] for r in rows),
+            per_access_s=total_pa, planner_s=total_step,
+            per_access_kacc_s=0.0, planner_kacc_s=0.0,
+            speedup=total_pa / total_step,
+        )
+    )
+    return rows
+
+
+def main(quick: bool = False) -> list[dict]:
+    print("Planner (batched id-space) vs per-access epoch walk — overall grid")
+    print(
+        f"{'fig':7s} {'model':12s} {'hw':5s} {'n':>2s} {'per_acc_s':>9s} "
+        f"{'planner_s':>9s} {'kacc/s pa':>9s} {'kacc/s pl':>9s} {'speedup':>7s}"
+    )
+    rows = run(quick)
+    for r in rows:
+        print(
+            f"{r['fig']:7s} {r['model']:12s} {r['hw']:5s} {r['nodes']:2d} "
+            f"{r['per_access_s']:9.2f} {r['planner_s']:9.2f} "
+            f"{r['per_access_kacc_s']:9.1f} {r['planner_kacc_s']:9.1f} "
+            f"{r['speedup']:6.2f}x"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--quick", action="store_true")
+    main(quick=_ap.parse_args().quick)

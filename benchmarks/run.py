@@ -1,39 +1,83 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_run.json]
+
 Prints per-benchmark tables plus a machine-readable `name,value,derived`
-CSV summary at the end.
+CSV summary at the end. ``--json`` additionally writes a structured perf
+record — per-section wall time, planner vs per-access epoch throughput,
+and per-backend chunk-read MB/s — so the perf trajectory is tracked
+across PRs (CI uploads it as an artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced scenario grid")
+    ap.add_argument(
+        "--json", type=Path, default=None, metavar="BENCH_run.json",
+        help="write a machine-readable perf record to this path",
+    )
     args = ap.parse_args()
 
-    from . import breakdown, chunk_size, convergence, io_overhead, overall, roofline_report
+    from . import (
+        breakdown,
+        chunk_size,
+        convergence,
+        io_overhead,
+        overall,
+        planner_speed,
+        roofline_report,
+    )
 
     csv_rows: list[tuple] = []
+    record: dict = {
+        "quick": args.quick,
+        "python": platform.python_version(),
+        "sections": [],
+    }
 
-    def section(title, fn):
+    def section(title, fn, key=None):
         print("\n" + "=" * 78)
         print(title)
         print("=" * 78)
         t0 = time.time()
-        fn()
-        csv_rows.append((title.split(" ")[0], f"{time.time()-t0:.1f}s"))
+        rows = fn()
+        wall = time.time() - t0
+        csv_rows.append((title.split(" ")[0], f"{wall:.1f}s"))
+        record["sections"].append({"title": title, "wall_s": round(wall, 3)})
+        if key is not None and rows is not None:
+            record[key] = rows
+
+    def backends_section():
+        rows = io_overhead.run_backends("all")
+        io_overhead.print_backend_table(rows)
+        return rows
+
+    def overall_section():
+        rows = overall.run(quick=args.quick)
+        overall.print_table(rows)
+        return rows
 
     section("Table 1: I/O overhead", lambda: io_overhead.main([]))
     section(
-        "Storage backends: chunk-read throughput",
-        lambda: io_overhead.main(["--backend", "all"]),
+        "Storage backends: chunk-read throughput (MB/s)",
+        backends_section,
+        key="backends",
     )
-    section("Figs 9-11: overall speedups", lambda: overall.main(quick=args.quick))
+    section(
+        "Planner vs per-access epoch throughput",
+        lambda: planner_speed.main(quick=args.quick),
+        key="planner",
+    )
+    section("Figs 9-11: overall speedups", overall_section, key="overall")
     section("Tables 4+5: ablation breakdown", breakdown.main)
     if not args.quick:
         from . import remote_memory
@@ -46,6 +90,10 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, t in csv_rows:
         print(f"{name},{t},see section above")
+
+    if args.json is not None:
+        args.json.write_text(json.dumps(record, indent=2, default=float))
+        print(f"\nperf record written to {args.json}")
 
 
 if __name__ == "__main__":

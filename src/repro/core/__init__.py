@@ -5,9 +5,10 @@ from .baselines import CoorDLLoader, NoIOLoader, PyTorchStyleLoader, run_baselin
 from .chunking import ChunkingPlan
 from .distributed import Cluster, EpochResult, RemoteMemory
 from .loader import RedoxLoader
+from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
-from .stats import NodeStats, PipelineTimeModel, StepIO
+from .stats import NodeStats, PipelineTimeModel, PlannerStats, StepIO
 from .storage import (
     BACKENDS,
     BackendStats,
@@ -27,6 +28,8 @@ __all__ = [
     "ChunkStore",
     "Cluster",
     "CoorDLLoader",
+    "EpochPlan",
+    "EpochPlanner",
     "EpochResult",
     "EpochSampler",
     "LocalNode",
@@ -35,6 +38,7 @@ __all__ = [
     "NodeStats",
     "ParallelBackend",
     "PipelineTimeModel",
+    "PlannerStats",
     "PyTorchStyleLoader",
     "RedoxLoader",
     "RemoteMemory",

@@ -29,6 +29,9 @@ class AbstractMemory:
         self.chunk_size = chunk_size
         self._file_sizes = file_sizes
         self.resident = np.full((num_groups, chunk_size), EMPTY, dtype=np.int64)
+        #: flat view sharing storage with ``resident`` — batched engines
+        #: gather/scatter by abstract location id (= g * c + s) directly.
+        self.resident_flat = self.resident.reshape(-1)
         self.used_bytes = 0
         self.peak_bytes = 0
         self.resident_count = 0
@@ -63,6 +66,35 @@ class AbstractMemory:
         self.used_bytes -= int(self._file_sizes[file_id])
         self.resident_count -= 1
         return file_id
+
+    # ------------------------------------------------------- batched variants
+    def fill_many(self, group: int, slots: np.ndarray, file_ids: np.ndarray) -> None:
+        """Vectorised :meth:`fill` of several slots of one group (chunk merge)."""
+        assert (self.resident[group, slots] == EMPTY).all(), (
+            "never-evict violated: attempted to overwrite a valid slot"
+        )
+        self.resident[group, slots] = file_ids
+        self.used_bytes += int(self._file_sizes[file_ids].sum())
+        self.resident_count += int(file_ids.size)
+        if self.used_bytes > self.peak_bytes:
+            self.peak_bytes = self.used_bytes
+
+    def take_many(self, groups: np.ndarray, slots: np.ndarray) -> np.ndarray:
+        """Vectorised :meth:`take` of several (group, slot) locations.
+
+        The caller guarantees the locations are distinct and resident — the
+        batched hit path only ever takes first occurrences of valid slots.
+        """
+        return self.take_many_flat(groups * self.chunk_size + slots)
+
+    def take_many_flat(self, locs: np.ndarray) -> np.ndarray:
+        """:meth:`take_many` addressed by abstract location id."""
+        file_ids = self.resident_flat[locs]
+        assert (file_ids >= 0).all(), "take_many() on an empty slot"
+        self.resident_flat[locs] = EMPTY
+        self.used_bytes -= int(self._file_sizes[file_ids].sum())
+        self.resident_count -= int(file_ids.size)
+        return file_ids
 
     # ------------------------------------------------------------- queries
     def group_empty_mask(self, group: int) -> np.ndarray:

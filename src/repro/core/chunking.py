@@ -23,6 +23,7 @@ The plan is pure metadata (numpy arrays); no file bytes are touched here.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 from pathlib import Path
@@ -125,6 +126,17 @@ class ChunkingPlan:
     def num_slots(self) -> int:
         """Total abstract memory locations M (= A * c)."""
         return self.num_groups * self.chunk_size
+
+    @functools.cached_property
+    def chunk_valid(self) -> np.ndarray:
+        """bool[num_chunks, c]: real member at (chunk, slot) (plan is
+        immutable, so the protocol hot path caches this once)."""
+        return self.chunk_files >= 0
+
+    @functools.cached_property
+    def chunk_files_clipped(self) -> np.ndarray:
+        """``maximum(chunk_files, 0)``: safe gather index for -1 padding."""
+        return np.maximum(self.chunk_files, 0)
 
     def group_chunk_range(self, group: int) -> tuple[int, int]:
         """Half-open chunk-id range [start, end) of ``group``."""

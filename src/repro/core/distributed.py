@@ -30,44 +30,40 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import numpy as np
 
 from .chunking import ChunkingPlan
-from .protocol import LocalNode
+from .protocol import _SCAN_BLOCK, LocalNode, _prev_occurrence
 from .sampler import EpochSampler
 from .stats import NodeStats, StepIO
 
 __all__ = ["Cluster", "EpochResult", "RemoteMemory"]
 
 
-def _build_loc_index(locs: np.ndarray) -> dict[int, np.ndarray]:
-    """location -> sorted positions at which a node's sequence touches it."""
-    if locs.size == 0:
-        return {}
-    order = np.argsort(locs, kind="stable")
-    sorted_locs = locs[order]
-    cuts = np.nonzero(np.diff(sorted_locs))[0] + 1
-    starts = np.concatenate([[0], cuts])
-    ends = np.concatenate([cuts, [locs.size]])
-    return {
-        int(sorted_locs[a]): np.sort(order[a:b]).astype(np.int64)
-        for a, b in zip(starts, ends)
-    }
 
 
 class RemoteMemory:
-    """Requester-side bounded cache of prefetched files, keyed by location."""
+    """Requester-side bounded cache of prefetched files, keyed by location.
 
-    def __init__(self, limit_bytes: int, file_sizes: np.ndarray):
+    Backed by a dense ``location -> file_id`` array so the batched access
+    engine can test/consume whole runs of remote-prefetch hits with gather/
+    scatter operations; payload bytes (real-bytes mode only) live in a side
+    dict keyed by location.
+    """
+
+    def __init__(self, limit_bytes: int, file_sizes: np.ndarray, num_locs: int):
         self.limit_bytes = int(limit_bytes)
         self._sizes = file_sizes
-        self._data: dict[int, tuple[int, bytes | None]] = {}  # loc -> (file, payload)
+        self._loc_file = np.full(int(num_locs), -1, dtype=np.int64)
+        self._payloads: dict[int, bytes] = {}
+        self._count = 0
         self.used_bytes = 0
         self.peak_bytes = 0
 
     def __contains__(self, loc: int) -> bool:
-        return loc in self._data
+        return self._loc_file[loc] >= 0
 
     @property
     def free_bytes(self) -> int:
@@ -75,19 +71,66 @@ class RemoteMemory:
 
     def put(self, loc: int, file_id: int, data: bytes | None = None) -> None:
         size = int(self._sizes[file_id])
-        assert loc not in self._data, "prefetch landed on an occupied location"
+        assert self._loc_file[loc] < 0, "prefetch landed on an occupied location"
         assert size <= self.free_bytes, "prefetch overran the remote-memory budget"
-        self._data[loc] = (file_id, data)
+        self._loc_file[loc] = file_id
+        if data is not None:
+            self._payloads[loc] = data
+        self._count += 1
         self.used_bytes += size
         self.peak_bytes = max(self.peak_bytes, self.used_bytes)
 
     def take(self, loc: int) -> tuple[int, bytes | None]:
-        file_id, data = self._data.pop(loc)
+        file_id = int(self._loc_file[loc])
+        assert file_id >= 0, "take() on an empty remote location"
+        self._loc_file[loc] = -1
+        self._count -= 1
         self.used_bytes -= int(self._sizes[file_id])
-        return file_id, data
+        return file_id, self._payloads.pop(loc, None)
+
+    # ------------------------------------------------------- batched variants
+    def file_at(self, locs: np.ndarray) -> np.ndarray:
+        """Vectorised lookup: file id held at each location, or -1."""
+        return self._loc_file[locs]
+
+    def put_many(self, locs: np.ndarray, file_ids: np.ndarray) -> None:
+        """Vectorised :meth:`put` of distinct empty locations (bulk ship)."""
+        sizes = int(self._sizes[file_ids].sum())
+        assert (self._loc_file[locs] < 0).all(), (
+            "prefetch landed on an occupied location"
+        )
+        assert sizes <= self.free_bytes, "prefetch overran the remote-memory budget"
+        self._loc_file[locs] = file_ids
+        self._count += int(locs.size)
+        self.used_bytes += sizes
+        self.peak_bytes = max(self.peak_bytes, self.used_bytes)
+
+    def store_payload(self, loc: int, data: bytes) -> None:
+        """Attach the payload for a location filled via :meth:`put_many`."""
+        self._payloads[loc] = data
+
+    def take_many(self, locs: np.ndarray) -> np.ndarray:
+        """Vectorised :meth:`take` of distinct occupied locations.
+
+        Payloads are *not* popped — the real-bytes caller drains them with
+        :meth:`pop_payload` while flattening the batch.
+        """
+        files = self._loc_file[locs]
+        assert (files >= 0).all(), "take_many() on an empty remote location"
+        self._loc_file[locs] = -1
+        self._count -= int(locs.size)
+        self.used_bytes -= int(self._sizes[files].sum())
+        return files
+
+    def pop_payload(self, loc: int) -> bytes | None:
+        return self._payloads.pop(loc, None)
+
+    def locations(self) -> np.ndarray:
+        """Occupied locations (ascending)."""
+        return np.nonzero(self._loc_file >= 0)[0]
 
     def __len__(self) -> int:
-        return len(self._data)
+        return self._count
 
 
 @dataclasses.dataclass
@@ -125,6 +168,8 @@ class Cluster:
         self.num_nodes = num_nodes
         self.prefetch_window = prefetch_window
         self.prefetch = prefetch
+        self.policy = policy
+        self.seed = seed
         # Contiguous group ranges per owner: data is partitioned across node
         # disks before training (paper §3.4).
         g = np.arange(plan.num_groups, dtype=np.int64)
@@ -132,22 +177,44 @@ class Cluster:
             g * num_nodes // max(plan.num_groups, 1), num_nodes - 1
         ).astype(np.int32)
         self.nodes = [
-            LocalNode(plan, policy=policy, seed=(seed, 7, r), store=store)
+            LocalNode(plan, policy=policy, seed=(seed, 7, r), store=store, node_id=r)
             for r in range(num_nodes)
         ]
         self.remote_mem = [
-            RemoteMemory(remote_memory_limit_bytes, plan.file_sizes)
+            RemoteMemory(remote_memory_limit_bytes, plan.file_sizes, plan.num_slots)
             for _ in range(num_nodes)
         ]
-        # pending[o][r]: location -> sequence position of r when the prefetch
-        # was sent. Mirrors r's remote memory restricted to o-owned locations.
-        self.pending: list[list[dict[int, int]]] = [
-            [dict() for _ in range(num_nodes)] for _ in range(num_nodes)
+        self._remote_limit = int(remote_memory_limit_bytes)
+        # pending[o][r]: the paper's Prefetch Check List — location ``loc``
+        # of r's remote memory has an outstanding prefetch from owner o,
+        # sent when r was at sequence position ``pending_sent[o][r][loc]``.
+        # Entries are dropped lazily, at the next (o, r) round trip, once the
+        # piggybacked position proves the requester consumed the location.
+        self.pending: list[list[np.ndarray]] = [
+            [np.zeros(plan.num_slots, dtype=bool) for _ in range(num_nodes)]
+            for _ in range(num_nodes)
+        ]
+        self.pending_sent: list[list[np.ndarray]] = [
+            [np.zeros(plan.num_slots, dtype=np.int64) for _ in range(num_nodes)]
+            for _ in range(num_nodes)
         ]
         self.sequences: list[np.ndarray] | None = None
         self._loc_of_seq: list[np.ndarray] | None = None
-        self._loc_positions: list[dict[int, np.ndarray]] | None = None
+        self._owner_of_seq: list[np.ndarray] | None = None
+        self._lockeys: list[np.ndarray] | None = None
         self.failed = np.zeros(num_nodes, dtype=bool)
+        self._recorder = None
+        # Engine flag: the batched ("step") engine uses the vectorised
+        # check-list helpers; the reference per-access engine keeps the
+        # scalar originals. Both implement identical protocol semantics —
+        # tests/test_planner.py asserts byte-identical runs.
+        self._vectorized = True
+
+    def set_recorder(self, recorder) -> None:
+        """Attach (or detach, with None) a planner event recorder."""
+        self._recorder = recorder
+        for node in self.nodes:
+            node.recorder = recorder
 
     @property
     def store(self):
@@ -167,22 +234,60 @@ class Cluster:
         store = self.store
         return store.backend_stats if store is not None else None
 
+    def planning_clone(self) -> "Cluster":
+        """A fresh, store-less cluster with identical protocol configuration.
+
+        The clairvoyant planner simulates an epoch on the clone (id-space
+        only, no bytes touched) to compute the live cluster's exact schedule;
+        per-epoch RNG derivation (see :meth:`LocalNode.begin_epoch`) makes
+        the clone's epoch-``e`` run identical to the live one regardless of
+        which epochs either side executed before.
+        """
+        return Cluster(
+            self.plan,
+            self.num_nodes,
+            remote_memory_limit_bytes=self._remote_limit,
+            prefetch_window=self.prefetch_window,
+            policy=self.policy,
+            prefetch=self.prefetch,
+            seed=self.seed,
+        )
+
     # ------------------------------------------------------------ lifecycle
     def begin_epoch(self, sampler: EpochSampler, epoch: int) -> list[np.ndarray]:
         for node in self.nodes:
-            node.begin_epoch()
+            node.begin_epoch(epoch)
         for rm in self.remote_mem:
             assert len(rm) == 0, "remote abstract memory not drained"
+            rm.peak_bytes = rm.used_bytes  # per-epoch peak, like NodeStats
         for row in self.pending:
-            for d in row:
-                d.clear()
+            for mask in row:
+                mask[:] = False
         self.sequences = sampler.node_sequences(epoch)
-        # Per-node position index: location -> sorted positions at which the
-        # node will access it. Owners use this to run the Prefetch Check List
-        # without any extra communication (sequences are pre-shared).
-        self._loc_of_seq = [self.plan.locations_of_files(s) for s in self.sequences]
-        self._loc_positions = [_build_loc_index(locs) for locs in self._loc_of_seq]
+        self._index_sequences()
         return self.sequences
+
+    def _index_sequences(self) -> None:
+        """Precompute per-node sequence indexes (rebuilt after fail_node).
+
+        * ``_loc_of_seq[r]`` — abstract location of every position (owners
+          look ahead into these to run the opportunistic-prefetch check list
+          without extra communication; sequences are pre-shared, §3.4);
+        * ``_owner_of_seq[r]`` — owning node of every position;
+        * ``_lockeys[r]`` — ``(location << 32) | position`` sorted: lets the
+          vectorised check-list cleanup resolve "r's next access of ``loc``
+          after position p" for every pending entry in one searchsorted.
+        """
+        self._loc_of_seq = [self.plan.locations_of_files(s) for s in self.sequences]
+        c = self.plan.chunk_size
+        self._owner_of_seq = [
+            self.owner_of_group[locs // c].astype(np.int64)
+            for locs in self._loc_of_seq
+        ]
+        self._lockeys = [
+            np.sort((locs << 32) | np.arange(locs.size, dtype=np.int64))
+            for locs in self._loc_of_seq
+        ]
 
     # -------------------------------------------------------------- access
     def access(
@@ -226,23 +331,45 @@ class Cluster:
         return res.file_id, res.data
 
     def _cleanup_pending(self, o: int, r: int, pos: int) -> None:
-        """Drop pending entries the requester has provably consumed (< pos)."""
-        pend = self.pending[o][r]
-        if not pend:
+        """Drop pending entries the requester has provably consumed (< pos).
+
+        An entry (loc, sent) is retired when r's next access of ``loc``
+        strictly after ``sent`` happened before ``pos`` — that access was
+        the remote-memory hit that consumed the prefetch. Two equivalent
+        implementations: the reference walks entries in Python (the
+        original per-access protocol); the batched engine resolves every
+        entry with one vectorised searchsorted over ``_lockeys``.
+        """
+        mask = self.pending[o][r]
+        entries = np.nonzero(mask)[0]
+        if entries.size == 0:
             return
-        positions = self._loc_positions[r]
-        done = []
-        for loc_id, sent_pos in pend.items():
-            plist = positions.get(loc_id)
-            if plist is None:
-                continue
-            nxt = np.searchsorted(plist, sent_pos, side="right")
-            if nxt < plist.size and plist[nxt] < pos:
-                done.append(loc_id)
-        for loc_id in done:
-            del pend[loc_id]
+        keys = self._lockeys[r]
+        sent = self.pending_sent[o][r][entries]
+        if self._vectorized:
+            idx = np.searchsorted(keys, (entries << 32) | sent, side="right")
+            valid = idx < keys.size
+            nxt = keys[np.minimum(idx, keys.size - 1)]
+            drop = valid & (nxt >> 32 == entries) & ((nxt & 0xFFFFFFFF) < pos)
+            mask[entries[drop]] = False
+            return
+        for loc, sent_pos in zip(entries.tolist(), sent.tolist()):
+            i = int(np.searchsorted(keys, (loc << 32) | sent_pos, side="right"))
+            if i < keys.size:
+                nxt = int(keys[i])
+                if (nxt >> 32) == loc and (nxt & 0xFFFFFFFF) < pos:
+                    mask[loc] = False
 
     def _opportunistic_prefetch(self, o: int, r: int, pos: int, io_r: StepIO) -> None:
+        if self._vectorized:
+            return self._opportunistic_prefetch_vec(o, r, pos, io_r)
+        return self._opportunistic_prefetch_scalar(o, r, pos, io_r)
+
+    def _opportunistic_prefetch_scalar(
+        self, o: int, r: int, pos: int, io_r: StepIO
+    ) -> None:
+        """Reference implementation: the paper's Fig. 6 walk, one position
+        at a time (the per-access engine's event path)."""
         plan = self.plan
         seq = self.sequences[r]
         locs = self._loc_of_seq[r]
@@ -251,12 +378,11 @@ class Cluster:
         owner_mem = self.nodes[o].memory
         end = min(pos + 1 + self.prefetch_window, seq.size)
         for q in range(pos + 1, end):
-            fq = int(seq[q])
-            gq = plan.group_of_file(fq)
+            gq = plan.group_of_file(int(seq[q]))
             if int(self.owner_of_group[gq]) != o:
                 continue
             loc_q = int(locs[q])
-            if loc_q in pend:
+            if pend[loc_q]:
                 continue  # requester slot occupied by an outstanding prefetch
             sq = loc_q - gq * plan.chunk_size
             file_p = owner_mem.get(gq, sq)
@@ -267,14 +393,297 @@ class Cluster:
                 continue  # respect the piggybacked remote-memory budget
             _, data = self.nodes[o].take_for_prefetch(gq, sq)
             rm.put(loc_q, file_p, data)
-            pend[loc_q] = pos
+            pend[loc_q] = True
+            self.pending_sent[o][r][loc_q] = pos
             self.nodes[r].stats.prefetch_received += 1
             io_r.net_bytes += size
             self.nodes[r].stats.peak_remote_bytes = max(
                 self.nodes[r].stats.peak_remote_bytes, rm.peak_bytes
             )
+            if self._recorder is not None:
+                self._recorder.on_ship(o, r, file_p, loc_q)
+
+    def _opportunistic_prefetch_vec(
+        self, o: int, r: int, pos: int, io_r: StepIO
+    ) -> None:
+        plan = self.plan
+        seq = self.sequences[r]
+        locs = self._loc_of_seq[r]
+        pend = self.pending[o][r]
+        rm = self.remote_mem[r]
+        owner_mem = self.nodes[o].memory
+        c = plan.chunk_size
+        end = min(pos + 1 + self.prefetch_window, seq.size)
+        if end <= pos + 1:
+            return
+        # Candidate filter, vectorised over the whole lookahead window:
+        # o-owned, first-occurrence positions whose location has no
+        # outstanding prefetch and whose file is resident in the owner's
+        # abstract memory (opportunistic — never reads disk for a prefetch).
+        # The snapshot stays exact through the walk: ships only *remove*
+        # residents, at locations the dedup already excludes from re-use.
+        w_locs = locs[pos + 1 : end]
+        cand = np.nonzero(
+            (self._owner_of_seq[r][pos + 1 : end] == o) & ~pend[w_locs]
+        )[0]
+        if cand.size == 0:
+            return
+        # Duplicate locations in the window: only the first may ship (the
+        # ship occupies the location; live re-check was via pend).
+        cand_locs = w_locs[cand]
+        first = np.zeros(cand.size, dtype=bool)
+        first[np.unique(cand_locs, return_index=True)[1]] = True
+        ship_locs = cand_locs[first]
+        gq = ship_locs // c
+        sq = ship_locs - gq * c
+        files = owner_mem.resident[gq, sq]
+        ok = files >= 0
+        gq, sq, files, ship_locs = gq[ok], sq[ok], files[ok], ship_locs[ok]
+        if files.size == 0:
+            return
+        sizes = plan.file_sizes[files]
+        # Budget walk (greedy, in window order): the all-fits prefix ships
+        # in bulk; the remainder falls back to the exact per-file walk
+        # (a later smaller file may still fit after a larger one did not).
+        fits = np.cumsum(sizes) <= rm.free_bytes
+        k = int(fits.sum()) if fits.all() else int(np.argmin(fits))
+        if k:
+            owner = self.nodes[o]
+            shipped = owner.memory.take_many(gq[:k], sq[:k])
+            assert not owner.consumed[shipped].any()
+            owner.consumed[shipped] = True
+            owner.stats.prefetch_sent += k
+            rm.put_many(ship_locs[:k], shipped)
+            pend[ship_locs[:k]] = True
+            self.pending_sent[o][r][ship_locs[:k]] = pos
+            if owner.store is not None:
+                for f, lc in zip(shipped.tolist(), ship_locs[:k].tolist()):
+                    rm.store_payload(lc, owner.buffer.pop(f))
+            self.nodes[r].stats.prefetch_received += k
+            io_r.net_bytes += int(sizes[:k].sum())
+            self.nodes[r].stats.peak_remote_bytes = max(
+                self.nodes[r].stats.peak_remote_bytes, rm.peak_bytes
+            )
+            if self._recorder is not None:
+                for f, lc in zip(shipped.tolist(), ship_locs[:k].tolist()):
+                    self._recorder.on_ship(o, r, f, lc)
+        for gq1, sq1, loc_q, file_p, size in zip(
+            gq[k:].tolist(), sq[k:].tolist(), ship_locs[k:].tolist(),
+            files[k:].tolist(), sizes[k:].tolist(),
+        ):
+            if size > rm.free_bytes:
+                continue  # respect the piggybacked remote-memory budget
+            _, data = self.nodes[o].take_for_prefetch(gq1, sq1)
+            rm.put(loc_q, file_p, data)
+            pend[loc_q] = True
+            self.pending_sent[o][r][loc_q] = pos
+            self.nodes[r].stats.prefetch_received += 1
+            io_r.net_bytes += size
+            self.nodes[r].stats.peak_remote_bytes = max(
+                self.nodes[r].stats.peak_remote_bytes, rm.peak_bytes
+            )
+            if self._recorder is not None:
+                self._recorder.on_ship(o, r, file_p, loc_q)
+
+    def access_step(
+        self,
+        r: int,
+        lo: int,
+        hi: int,
+        io_by_node: dict[int, StepIO],
+        *,
+        payloads: "list | None" = None,
+    ) -> np.ndarray:
+        """Node ``r`` performs its sequence positions ``[lo, hi)``, batched.
+
+        Byte-identical to calling :meth:`access` per position: runs of
+        consecutive hits — local abstract-memory hits and remote-prefetch
+        hits — are consumed with NumPy gather/scatter; only protocol
+        *events* (misses, remote round trips, opportunistic ships) drop to
+        the per-access path, which preserves the exact RNG draw order.
+        """
+        n = hi - lo
+        out = np.empty(n, dtype=np.int64)
+        if n <= 0:
+            return out
+        fids = np.asarray(self.sequences[r][lo:hi], dtype=np.int64)
+        locs = self._loc_of_seq[r][lo:hi]
+        owners = self._owner_of_seq[r][lo:hi]
+        node = self.nodes[r]
+        if (owners == r).all():
+            # Whole slice is owner-local (always true for 1-node clusters).
+            io = io_by_node.setdefault(r, StepIO())
+            return node.request_step(fids, io, payloads=payloads, locs=locs)
+        rm = self.remote_mem[r]
+        prev = _prev_occurrence(locs)
+        resident = node.memory.resident_flat
+        i = 0
+        while i < n:
+            # Scan one block at a time: during the miss-heavy epoch prefix
+            # this bounds the per-event vector work; during the hit-heavy
+            # remainder runs extend block by block.
+            j = min(i + _SCAN_BLOCK, n)
+            sub_loc = locs[i:j]
+            local = owners[i:j] == r
+            res_f = resident[sub_loc]
+            rm_f = rm.file_at(sub_loc)
+            # Safe bulk hits: a valid local resident (owner-local access) or
+            # an already-prefetched remote location — and no earlier position
+            # in the run targeting the same location (hits self-invalidate).
+            safe = np.where(local, res_f >= 0, rm_f >= 0) & (prev[i:j] < i)
+            k = int(safe.argmin())
+            run = j - i if safe[k] else k
+            if run:
+                lm = local[:run]
+                ret = np.where(lm, res_f[:run], rm_f[:run])
+                n_local = int(lm.sum())
+                if n_local:
+                    node.memory.take_many_flat(sub_loc[:run][lm])
+                    node.consumed[res_f[:run][lm]] = True
+                    node.stats.local_hits += n_local
+                    node.stats.peak_local_bytes = max(
+                        node.stats.peak_local_bytes, node.memory.peak_bytes
+                    )
+                    io_by_node.setdefault(r, StepIO())
+                if run - n_local:
+                    rm.take_many(sub_loc[:run][~lm])
+                    node.stats.remote_prefetch_hits += run - n_local
+                node.stats.accesses += run
+                out[i : i + run] = ret
+                if node.store is not None:
+                    for f, is_local, lc in zip(
+                        ret.tolist(), lm.tolist(), sub_loc[:run].tolist()
+                    ):
+                        data = node.buffer.pop(f) if is_local else rm.pop_payload(lc)
+                        if payloads is not None:
+                            payloads.append(data)
+                i += run
+                if run == j - (i - run):  # block exhausted by hits: next block
+                    continue
+            if i >= n:
+                break
+            # The breaker is a genuine miss: either its location is invalid
+            # (not resident / not prefetched) or its in-run predecessor was
+            # just consumed, which empties the location either way.
+            f, data = self.access(r, lo + i, int(fids[i]), io_by_node)
+            out[i] = f
+            if payloads is not None:
+                payloads.append(data)
+            i += 1
+        return out
 
     # -------------------------------------------------------------- drivers
+    def _step_bounds(self, r: int, step: int, batch_per_node: int) -> tuple[int, int]:
+        size = self.sequences[r].size
+        return min(step * batch_per_node, size), min((step + 1) * batch_per_node, size)
+
+    def _live_steps(self, batch_per_node: int) -> int:
+        return max(
+            math.ceil(self.sequences[r].size / batch_per_node)
+            for r in range(self.num_nodes)
+            if not self.failed[r]
+        )
+
+    def epoch_stream(
+        self,
+        sampler: EpochSampler,
+        epoch: int,
+        batch_per_node: int,
+        *,
+        stepping: str = "ceil",
+        engine: str = "step",
+        collect_payloads: bool = False,
+        recorder=None,
+        failures: "dict[int, int] | None" = None,
+    ):
+        """THE epoch driver: every live epoch walk goes through here.
+
+        Yields ``(step, returned_per_node, payloads, io_by_node)`` per
+        training step. ``stepping`` controls the step grid:
+
+        * ``"ceil"`` — ``max_r ceil(len_r / b)`` steps, ragged last step
+          included in the grid (the :meth:`run_epoch` accounting used by the
+          time model);
+        * ``"floor_tail"`` — ``min_r len_r // b`` full-size steps are
+          yielded; the ragged remainder is drained afterwards *without*
+          yielding (the loader contract: fixed-shape batches only).
+
+        ``engine`` selects the batched id-space walk (``"step"``) or the
+        reference per-access walk (``"per_access"``) — kept for planner
+        equivalence tests and as the benchmark baseline. ``failures``
+        optionally maps a step index to a node id to kill at that step's
+        barrier (elastic-remap planning and tests).
+        """
+        assert stepping in ("ceil", "floor_tail")
+        assert engine in ("step", "per_access")
+        self.begin_epoch(sampler, epoch)
+        self._vectorized = engine == "step"
+        if recorder is not None:
+            self.set_recorder(recorder)
+        try:
+            if stepping == "floor_tail":
+                assert not failures, "failure schedules require ceil stepping"
+                num_steps = min(s.size for s in self.sequences) // batch_per_node
+            step = 0
+            while True:
+                if stepping == "ceil":
+                    if failures and step in failures:
+                        dead = failures[step]
+                        self.fail_node(
+                            dead,
+                            min(step * batch_per_node, self.sequences[dead].size),
+                        )
+                    if step >= self._live_steps(batch_per_node):
+                        break
+                elif step >= num_steps:
+                    break
+                io_by_node: dict[int, StepIO] = {}
+                if recorder is not None:
+                    recorder.begin_step(step)
+                returned: list[np.ndarray] = []
+                payloads: "list | None" = [] if collect_payloads else None
+                for r in range(self.num_nodes):
+                    if self.failed[r]:
+                        returned.append(np.empty(0, dtype=np.int64))
+                        continue
+                    lo, hi = self._step_bounds(r, step, batch_per_node)
+                    if engine == "step":
+                        ret = self.access_step(r, lo, hi, io_by_node, payloads=payloads)
+                    else:
+                        ret = np.empty(hi - lo, dtype=np.int64)
+                        for pos in range(lo, hi):
+                            f, data = self.access(
+                                r, pos, int(self.sequences[r][pos]), io_by_node
+                            )
+                            ret[pos - lo] = f
+                            if payloads is not None:
+                                payloads.append(data)
+                    returned.append(ret)
+                if recorder is not None:
+                    recorder.end_step(step, returned, io_by_node)
+                yield step, returned, payloads, io_by_node
+                step += 1
+            if stepping == "floor_tail":
+                # Drain the ragged tail so exactly-once epoch invariants hold.
+                io_by_node = {}
+                if recorder is not None:
+                    recorder.begin_step(num_steps)
+                tail: list[np.ndarray] = []
+                for r in range(self.num_nodes):
+                    lo = num_steps * batch_per_node
+                    # payloads popped but not collected: tail records are
+                    # consumed for the invariants, never trained on
+                    tail.append(
+                        self.access_step(r, lo, self.sequences[r].size, io_by_node)
+                    )
+                if recorder is not None:
+                    recorder.end_step(num_steps, tail, io_by_node)
+            self._check_epoch_complete()
+        finally:
+            self._vectorized = True
+            if recorder is not None:
+                self.set_recorder(None)
+
     def run_epoch(
         self,
         sampler: EpochSampler,
@@ -282,36 +691,113 @@ class Cluster:
         batch_per_node: int,
         *,
         collect_returned: bool = True,
+        engine: str = "step",
+        plan=None,
+        recorder=None,
+        failures: "dict[int, int] | None" = None,
     ) -> EpochResult:
-        """Execute a full epoch with per-step node interleaving (DP barrier)."""
-        seqs = self.begin_epoch(sampler, epoch)
-        steps = max(math.ceil(len(s) / batch_per_node) for s in seqs)
+        """Execute a full epoch with per-step node interleaving (DP barrier).
+
+        With ``plan`` (an :class:`repro.core.planner.EpochPlan`) the epoch is
+        *replayed* from the pre-computed schedule instead of executed live —
+        no protocol decisions, no RNG, just the recorded event stream.
+        """
         per_node_step_io: list[list[StepIO]] = [[] for _ in range(self.num_nodes)]
-        returned: list[list[int]] = [[] for _ in range(self.num_nodes)]
-        for step in range(steps):
-            io_by_node: dict[int, StepIO] = {}
-            for r in range(self.num_nodes):
-                if self.failed[r]:
-                    continue
-                seq = self.sequences[r]
-                lo, hi = step * batch_per_node, min((step + 1) * batch_per_node, seq.size)
-                for pos in range(lo, hi):
-                    f, _ = self.access(r, pos, int(seq[pos]), io_by_node)
-                    if collect_returned:
-                        returned[r].append(f)
+        returned: list[list[np.ndarray]] = [[] for _ in range(self.num_nodes)]
+        if plan is not None:
+            stream = self.replay_stream(
+                plan, epoch=epoch, batch_per_node=batch_per_node, stepping="ceil"
+            )
+        else:
+            stream = self.epoch_stream(
+                sampler, epoch, batch_per_node,
+                engine=engine, recorder=recorder, failures=failures,
+            )
+        for _, step_returned, _, io_by_node in stream:
             for r in range(self.num_nodes):
                 per_node_step_io[r].append(io_by_node.get(r, StepIO()))
-        self._check_epoch_complete()
+                if collect_returned:
+                    returned[r].append(step_returned[r])
         node_stats = [n.stats for n in self.nodes]
         agg = node_stats[0]
         for s in node_stats[1:]:
             agg = agg.merge(s)
+        empty = np.empty(0, dtype=np.int64)
         return EpochResult(
             stats=agg,
             node_stats=node_stats,
             per_node_step_io=per_node_step_io,
-            returned=[np.asarray(rt, dtype=np.int64) for rt in returned],
+            returned=[
+                np.concatenate(rt) if rt else empty for rt in returned
+            ],
         )
+
+    def replay_stream(
+        self,
+        plan,
+        *,
+        epoch: int | None = None,
+        batch_per_node: int | None = None,
+        stepping: str | None = None,
+        collect_payloads=None,
+    ):
+        """Replay a pre-computed :class:`EpochPlan`: the execute half of the
+        plan/execute split.
+
+        Yields the same ``(step, returned_per_node, payloads, io_by_node)``
+        stream as :meth:`epoch_stream` without running any protocol logic.
+        In real-bytes mode (a ChunkStore attached) the plan's exact chunk
+        schedule is handed to the storage backend up front
+        (:meth:`ChunkStore.schedule_reads`), so readahead is clairvoyant
+        rather than heuristic; reads/ships/returns then follow the recorded
+        event order. Node stats are installed from the plan (they are exact
+        protocol counters) with measured read-wait folded in.
+        """
+        store = self.store
+        if collect_payloads is None:
+            collect_payloads = store is not None
+        plan.validate(self, epoch, batch_per_node, stepping)
+        for r, st in enumerate(plan.node_stats):
+            self.nodes[r].stats = st.copy()
+        if store is not None:
+            store.schedule_reads(plan.load_chunk.tolist())
+        # One global payload pool: exactly-once guarantees each file is
+        # loaded at most once and consumed exactly once per epoch, so
+        # ownership transfers (ships, remote on-demand responses) never need
+        # modelling here — the byte movement they represent is priced by the
+        # plan's StepIO net counters, not re-enacted.
+        pool: dict[int, bytes] = {}
+        for step in range(plan.num_steps + (1 if plan.has_tail else 0)):
+            io_by_node = plan.step_io(step)
+            if store is not None:
+                for li in range(*plan.load_range(step)):
+                    owner = int(plan.load_owner[li])
+                    t0 = time.perf_counter()
+                    records = dict(store.read_chunk(int(plan.load_chunk[li])))
+                    wait = time.perf_counter() - t0
+                    st = self.nodes[owner].stats
+                    st.read_wait_s += wait
+                    if owner in io_by_node:
+                        io_by_node[owner].read_wait_s += wait
+                    st.peak_inflight_reads = max(
+                        st.peak_inflight_reads, store.backend_stats.peak_inflight
+                    )
+                    for f in plan.load_files(li).tolist():
+                        pool[f] = records[f]
+            returned = plan.step_returned(step)
+            if step >= plan.num_steps:
+                if store is not None:  # tail payloads are read but never yielded
+                    for ret in returned:
+                        for f in ret.tolist():
+                            pool.pop(f, None)
+                break
+            payloads = None
+            if collect_payloads:
+                payloads = [
+                    pool.pop(int(f)) for ret in returned for f in ret.tolist()
+                ]
+            yield step, returned, payloads, io_by_node
+        assert not pool, "replay left undelivered payloads behind"
 
     def _check_epoch_complete(self) -> None:
         """Every file consumed at its (current) owner; all memories drained.
@@ -355,10 +841,9 @@ class Cluster:
         shares = [tail[i :: len(survivors)] for i in range(len(survivors))]
         for r, share in zip(survivors, shares):
             self.sequences[r] = np.concatenate([self.sequences[r], share])
-        # Rebuild the per-node location indexes (positions in the unchanged
+        # Rebuild the per-node sequence indexes (positions in the unchanged
         # prefixes are preserved, so pending[o][r] entries stay valid).
-        self._loc_of_seq = [self.plan.locations_of_files(s) for s in self.sequences]
-        self._loc_positions = [_build_loc_index(locs) for locs in self._loc_of_seq]
+        self._index_sequences()
 
     def remap_ownership(self, dead: int) -> None:
         """Elastic remap after node ``dead`` fails mid-epoch (DESIGN.md §5).
@@ -392,18 +877,15 @@ class Cluster:
         for r in survivors:
             self.nodes[r].consumed |= journal
         # 4. Outstanding prefetches *from* the dead node already live in the
-        #    requesters' remote memories (real data — still valid). Pending
-        #    bookkeeping moves nowhere: new owners start with empty pending,
-        #    which is safe (conservative) because requesters re-miss at most
-        #    once per location.
+        #    requesters' remote memories (real data — still valid). Their
+        #    check-list entries migrate to the groups' new owners so nobody
+        #    double-ships to a still-occupied location.
         for r in range(self.num_nodes):
-            merged: dict[int, int] = {}
-            merged.update(self.pending[dead][r])
-            for loc, p in merged.items():
-                g = loc // self.plan.chunk_size
-                new_o = int(self.owner_of_group[g])
-                self.pending[new_o][r][loc] = p
-            self.pending[dead][r] = {}
+            for loc in np.nonzero(self.pending[dead][r])[0].tolist():
+                new_o = int(self.owner_of_group[loc // self.plan.chunk_size])
+                self.pending[new_o][r][loc] = True
+                self.pending_sent[new_o][r][loc] = self.pending_sent[dead][r][loc]
+            self.pending[dead][r][:] = False
         # 5. Prefetched files sitting in the dead node's *remote memory* were
         #    journalled as consumed by their senders but never reached
         #    training. Requesters durably journal remote consumptions too (4
@@ -411,12 +893,12 @@ class Cluster:
         #    senders un-consume exactly the lost ones; survivors will then
         #    re-fetch them from the chunk store through normal refills.
         rm_dead = self.remote_mem[dead]
-        for loc in list(rm_dead._data):
+        for loc in rm_dead.locations().tolist():
             f, _ = rm_dead.take(loc)
             for r in survivors:
                 self.nodes[r].consumed[f] = False
         for o in range(self.num_nodes):
-            self.pending[o][dead] = {}
+            self.pending[o][dead][:] = False
         # 6. Repatriation: a survivor may now *own* a location for which it
         #    holds a prefetched file in its remote memory (the prefetch came
         #    from the dead ex-owner). The owner path never consults remote
@@ -427,7 +909,7 @@ class Cluster:
         for r in survivors:
             rm_r = self.remote_mem[r]
             self_locs = [
-                loc for loc in rm_r._data
+                loc for loc in rm_r.locations().tolist()
                 if int(self.owner_of_group[loc // c]) == r
             ]
             for loc in self_locs:
@@ -438,4 +920,4 @@ class Cluster:
                 self.nodes[r].memory.fill(gq, sq, f)
                 if data is not None:
                     self.nodes[r].buffer[f] = data
-                self.pending[r][r].pop(loc, None)
+                self.pending[r][r][loc] = False

@@ -10,14 +10,22 @@ Batches are fixed-shape ``(batch, seq_len)`` int32 token grids with a loss
 mask (documents are clipped/padded — standard LM practice), so the jitted
 train step never recompiles.
 
+Clairvoyant epochs (DESIGN.md §8): by default each epoch is *planned*
+before it is executed — an :class:`EpochPlanner` simulates the protocol in
+id-space (cheap NumPy batch work), and the epoch then replays the plan:
+the storage backend receives the exact global chunk-read schedule
+(``ChunkStore.schedule_reads``) so its readahead is prefetch-exact rather
+than heuristic. ``use_planner=False`` restores the live walk (the
+``_refill_hints`` heuristic drives readahead instead).
+
 Straggler mitigation (DESIGN.md §5): an optional background prefetch queue
 (`queue_depth`) runs the protocol walk (and its storage reads) ahead of
 consumption on a worker thread, while decode + grid assembly happen on the
 consumer side at ``__next__`` time — a two-stage pipeline. With a parallel
-storage backend the chunk reads themselves also overlap (protocol hints →
-bounded readahead), so a slow chunk read or remote round trip only stalls
-training once the queue drains, mirroring the paper's client/server split
-where clients hide server latency.
+storage backend the chunk reads themselves also overlap, so a slow chunk
+read or remote round trip only stalls training once the queue drains,
+mirroring the paper's client/server split where clients hide server
+latency.
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ import numpy as np
 
 from ..data.tokens import decode_record
 from .distributed import Cluster
+from .planner import EpochPlanner
 from .sampler import EpochSampler
 from .stats import StepIO
 
@@ -63,6 +72,7 @@ class RedoxLoader:
         seq_len: int,
         pad_id: int = 0,
         queue_depth: int = 2,
+        use_planner: bool = True,
     ):
         assert cluster.num_nodes == sampler.num_nodes
         self.cluster = cluster
@@ -71,6 +81,9 @@ class RedoxLoader:
         self.seq_len = seq_len
         self.pad_id = pad_id
         self.queue_depth = queue_depth
+        self.use_planner = use_planner
+        self.last_plan = None       # EpochPlan of the most recent epoch
+        self._worker: threading.Thread | None = None
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
         n = min(len(s) for s in self.sampler.node_sequences(epoch))
@@ -89,28 +102,55 @@ class RedoxLoader:
         parallel backend these are themselves overlapped via readahead.
         Stage 2 (this thread): record decode + ``_to_grid`` assembly,
         running while the worker's next reads are in flight.
+
+        If the consumer abandons the generator early (``break``, an
+        exception, or explicit ``close()``), the worker is signalled to
+        shut down and joined — it must never stay blocked on a full queue
+        (the epoch's protocol state is then mid-flight; a later
+        ``begin_epoch`` asserts on the undrained memory by design).
         """
         q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
         stop = object()
+        abandoned = threading.Event()
         failure: list[BaseException] = []
+
+        def put(item) -> bool:
+            """Blocking put that aborts when the consumer is gone."""
+            while not abandoned.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
                 for item in self._produce(epoch):
-                    q.put(item)
+                    if not put(item):
+                        return
             except BaseException as e:  # re-raised on the consumer side
                 failure.append(e)
             finally:
-                q.put(stop)
+                put(stop)
 
         t = threading.Thread(target=worker, daemon=True)
+        self._worker = t
         t.start()
-        while True:
-            item = q.get()
-            if item is stop:
-                break
-            yield self._assemble(*item)
-        t.join()
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                yield self._assemble(*item)
+        finally:
+            abandoned.set()
+            while True:  # drain so a blocked put() observes the signal fast
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            t.join()
         if failure:
             # A failed protocol walk or storage read must not end the epoch
             # cleanly — the consumer would silently train on a short epoch.
@@ -130,26 +170,38 @@ class RedoxLoader:
         )
 
     def _produce(self, epoch: int):
-        """Walk the protocol; yield (raw payloads, step, io) per step."""
-        cluster, sampler = self.cluster, self.sampler
-        seqs = cluster.begin_epoch(sampler, epoch)
-        num_nodes = cluster.num_nodes
-        steps = min(len(s) for s in seqs) // self.batch_per_node
-        for step in range(steps):
-            io_by_node: dict[int, StepIO] = {}
-            payloads: list = []
-            for r in range(num_nodes):
-                lo = step * self.batch_per_node
-                for pos in range(lo, lo + self.batch_per_node):
-                    fid, data = cluster.access(r, pos, int(seqs[r][pos]), io_by_node)
-                    assert data is not None, (
-                        "RedoxLoader requires a Cluster built with a ChunkStore"
-                    )
-                    payloads.append(data)
+        """Yield (raw payloads, step, io) per step — the plan/execute split.
+
+        Same plan-driven driver as ``Cluster.run_epoch``: with
+        ``use_planner`` the epoch is first computed in id-space
+        (:class:`EpochPlanner`), the exact chunk-read schedule is handed to
+        the storage backend, and the recorded events are replayed;
+        otherwise the batched live walk runs with heuristic readahead.
+        """
+        cluster = self.cluster
+        assert cluster.store is not None, (
+            "RedoxLoader requires a Cluster built with a ChunkStore"
+        )
+        if self.use_planner:
+            plan = EpochPlanner(cluster).plan(
+                self.sampler, epoch, self.batch_per_node, stepping="floor_tail"
+            )
+            self.last_plan = plan
+            b = cluster.backend_stats
+            before = (b.scheduled_hits, b.prefetch_hits)
+            stream = cluster.replay_stream(
+                plan, epoch=epoch, batch_per_node=self.batch_per_node,
+                stepping="floor_tail",
+            )
+        else:
+            plan, before = None, None
+            stream = cluster.epoch_stream(
+                self.sampler, epoch, self.batch_per_node,
+                stepping="floor_tail", collect_payloads=True,
+            )
+        for step, _, payloads, io_by_node in stream:
             yield payloads, step, io_by_node
-        # Drain the ragged tail so the exactly-once epoch invariants hold.
-        io_by_node = {}
-        for r in range(num_nodes):
-            for pos in range(steps * self.batch_per_node, len(seqs[r])):
-                cluster.access(r, pos, int(seqs[r][pos]), io_by_node)
-        cluster._check_epoch_complete()
+        if plan is not None:
+            b = cluster.backend_stats
+            plan.stats.scheduled_read_hits = b.scheduled_hits - before[0]
+            plan.stats.heuristic_prefetch_hits = b.prefetch_hits - before[1]

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["NodeStats", "PipelineTimeModel", "StepIO"]
+__all__ = ["NodeStats", "PipelineTimeModel", "PlannerStats", "StepIO"]
 
 
 @dataclasses.dataclass
@@ -36,7 +36,10 @@ class NodeStats:
     read_wait_s: float = 0.0       # wall time blocked on storage chunk reads
     peak_local_bytes: int = 0
     peak_remote_bytes: int = 0
-    peak_inflight_reads: int = 0   # backend's max concurrent background reads
+    # Backend's max concurrent background reads. NB: the storage backend is
+    # shared across nodes and epochs, so unlike the other peaks this mirrors
+    # its store-lifetime high-water mark (identically in live and replay).
+    peak_inflight_reads: int = 0
 
     @property
     def mean_fill_rate(self) -> float:
@@ -56,6 +59,29 @@ class NodeStats:
             else:
                 setattr(out, f.name, a + b)
         return out
+
+    def copy(self) -> "NodeStats":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
+class PlannerStats:
+    """Counters for the clairvoyant plan/execute split (core/planner.py).
+
+    ``scheduled_read_hits`` vs ``heuristic_prefetch_hits`` separates backend
+    reads served by the planner's exact chunk schedule from those served by
+    the ``_refill_hints`` heuristic readahead (the fallback when no plan is
+    attached); the executing loader fills them in from the backend counters
+    after the epoch.
+    """
+
+    plan_time_s: float = 0.0       # wall time to compute the EpochPlan
+    planned_steps: int = 0         # training steps covered by the plan
+    planned_accesses: int = 0      # total accesses scheduled
+    planned_chunk_loads: int = 0   # exact chunk-read schedule length
+    planned_ships: int = 0         # opportunistic prefetch ships scheduled
+    scheduled_read_hits: int = 0   # backend reads served by the exact schedule
+    heuristic_prefetch_hits: int = 0  # reads served by heuristic readahead
 
 
 @dataclasses.dataclass

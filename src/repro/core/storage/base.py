@@ -39,8 +39,10 @@ class BackendStats:
     bytes_read: int = 0        # payload bytes handed to callers
     file_opens: int = 0        # OS-level open()/mmap() operations
     wait_seconds: float = 0.0  # time callers spent blocked inside read()
-    prefetch_issued: int = 0   # readahead reads actually submitted
-    prefetch_hits: int = 0     # read() calls served by an earlier prefetch
+    prefetch_issued: int = 0   # heuristic readahead reads actually submitted
+    prefetch_hits: int = 0     # read() calls served by a heuristic prefetch
+    scheduled_issued: int = 0  # readahead reads submitted from an exact schedule
+    scheduled_hits: int = 0    # read() calls served by the exact schedule
     peak_inflight: int = 0     # max concurrent background reads observed
 
     def throughput(self) -> float:
@@ -71,6 +73,22 @@ class StorageBackend(abc.ABC):
     # ------------------------------------------------------------- optional
     def prefetch(self, paths: "list[Path]") -> None:
         """Hint that ``paths`` will be read soon. Default: no-op."""
+
+    def schedule_reads(self, paths: "list[Path]") -> None:
+        """Install the *exact* upcoming read order (clairvoyant planner).
+
+        Unlike :meth:`prefetch` hints — which are non-binding guesses that
+        may be dropped — a schedule is the ground-truth sequence of future
+        :meth:`read` calls, duplicates included. Async backends keep their
+        readahead window filled from its head; synchronous backends ignore
+        it (the default no-op), and the hint heuristic stays as the
+        fallback when no schedule is active.
+        """
+
+    @property
+    def scheduled_active(self) -> bool:
+        """True while an exact read schedule is installed and unexhausted."""
+        return False
 
     def close(self) -> None:
         """Release cached handles/maps/threads. Safe to call twice."""

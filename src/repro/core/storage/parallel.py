@@ -1,24 +1,28 @@
 """Parallel backend: threadpool chunk reads with bounded readahead.
 
 This is the FanStore/Clairvoyant-prefetch move applied to Redox's chunk
-loads: the protocol *hints* which chunks it will likely refill next
-(:meth:`prefetch`); a small thread pool reads them in the background while
-the consumer decodes records and assembles batches. A later blocking
-:meth:`read` of a hinted path just claims the finished (or in-flight)
-future, so the caller's stall shrinks from a full disk read to ~zero.
+loads, with two sources of readahead:
 
-Readahead is bounded: at most ``readahead`` unclaimed reads exist at any
-time (in-flight + completed-but-unclaimed), so speculation can never blow
-up memory — excess hints are dropped, not queued. Delegated byte access
-goes through an inner synchronous backend (VFS by default), which is what
-makes this backend composable with any storage medium.
+* **Exact schedule** (:meth:`schedule_reads`) — the clairvoyant planner's
+  global chunk-read order. The readahead window is kept filled from the
+  schedule head, so every blocking :meth:`read` claims a finished (or
+  in-flight) future: prefetching is exact, not speculative.
+* **Heuristic hints** (:meth:`prefetch`) — the protocol's ``_refill_hints``
+  guesses, used as the fallback whenever no schedule is installed.
+
+Readahead is bounded either way: at most ``readahead`` unclaimed reads
+exist at any time (in-flight + completed-but-unclaimed), so neither source
+can blow up memory — excess hints are dropped, and the schedule is drained
+lazily. Delegated byte access goes through an inner synchronous backend
+(VFS by default), which is what makes this backend composable with any
+storage medium.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from pathlib import Path
 
@@ -29,7 +33,7 @@ __all__ = ["ParallelBackend"]
 
 
 class ParallelBackend(StorageBackend):
-    """Concurrent reads over an inner backend, driven by prefetch hints."""
+    """Concurrent reads over an inner backend: exact schedule or hints."""
 
     name = "parallel"
     wants_prefetch = True
@@ -48,27 +52,72 @@ class ParallelBackend(StorageBackend):
             max_workers=int(workers), thread_name_prefix="chunk-read"
         )
         self._futures: "dict[Path, Future]" = {}
+        self._origin: "dict[Path, str]" = {}  # path -> 'sched' | 'hint'
         # Hints that arrived while readahead capacity was full; promoted to
         # real background reads as claims free slots. Bounded, insertion-
         # ordered (hints arrive best-first from the protocol).
         self._backlog: "OrderedDict[Path, None]" = OrderedDict()
+        # The exact future read order (duplicates included), drained head-
+        # first into the readahead window while capacity allows.
+        self._schedule: "deque[Path]" = deque()
         self._lock = threading.Lock()
         self._closed = False
 
-    def _submit_locked(self, path: Path) -> None:
+    def _submit_locked(self, path: Path, origin: str = "hint") -> None:
         self._futures[path] = self._pool.submit(self.inner.read, path)
-        self.stats.prefetch_issued += 1
+        self._origin[path] = origin
+        if origin == "sched":
+            self.stats.scheduled_issued += 1
+        else:
+            self.stats.prefetch_issued += 1
         self.stats.peak_inflight = max(self.stats.peak_inflight, len(self._futures))
 
+    def _top_up_schedule_locked(self) -> None:
+        while self._schedule and len(self._futures) < self.readahead:
+            if self._schedule[0] in self._futures:
+                # A duplicate of an in-flight read: later occurrences are
+                # resubmitted after the first is claimed, keeping order.
+                break
+            self._submit_locked(self._schedule.popleft(), origin="sched")
+
     # ------------------------------------------------------------- readahead
+    def schedule_reads(self, paths: "list[Path]") -> None:
+        """Install the planner's exact read order and start filling it.
+
+        *Replaces* any previous schedule: an epoch abandoned mid-replay
+        (consumer broke out of the loader) must not leave stale entries or
+        stale in-flight submissions pinning the readahead window. All
+        unclaimed scheduled reads are discarded with the old schedule —
+        after a *completed* epoch there are none, so this only costs
+        anything on the abandonment path.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            stale = [p for p, origin in self._origin.items() if origin == "sched"]
+            for p in stale:
+                fut = self._futures.pop(p, None)
+                if fut is not None:
+                    fut.cancel()
+                del self._origin[p]
+            self._schedule = deque(paths)
+            self._backlog.clear()  # exact knowledge supersedes guesses
+            self._top_up_schedule_locked()
+
+    @property
+    def scheduled_active(self) -> bool:
+        return bool(self._schedule)
+
     def prefetch(self, paths: "list[Path]") -> None:
         """Submit background reads for ``paths``, up to the readahead bound.
 
         Overflow hints are remembered (bounded backlog) and promoted when a
         claim frees capacity, so readahead stays saturated across misses.
+        Ignored while an exact schedule is active — the planner already
+        knows the true read order.
         """
         with self._lock:
-            if self._closed:
+            if self._closed or self._schedule:
                 return
             for path in paths:
                 if path in self._futures:
@@ -86,10 +135,20 @@ class ParallelBackend(StorageBackend):
         with self._lock:
             fut = self._futures.pop(path, None)
             if fut is not None:
-                self.stats.prefetch_hits += 1
+                if self._origin.pop(path, "hint") == "sched":
+                    self.stats.scheduled_hits += 1
+                else:
+                    self.stats.prefetch_hits += 1
+            elif self._schedule and self._schedule[0] == path:
+                # Cold read raced ahead of its scheduled submission (window
+                # momentarily full): consume the head so order stays exact.
+                self._schedule.popleft()
             self._backlog.pop(path, None)  # being read now: hint is stale
+            if not self._closed:
+                self._top_up_schedule_locked()
             while (
                 not self._closed
+                and not self._schedule
                 and self._backlog
                 and len(self._futures) < self.readahead
             ):
@@ -124,6 +183,8 @@ class ParallelBackend(StorageBackend):
             self._closed = True
             pending = list(self._futures.values())
             self._futures.clear()
+            self._origin.clear()
+            self._schedule.clear()
         for fut in pending:
             fut.cancel()
         self._pool.shutdown(wait=True)

@@ -87,6 +87,16 @@ class ChunkStore:
         if chunks and self._backend.wants_prefetch:
             self._backend.prefetch([self.chunk_path(k) for k in chunks])
 
+    def schedule_reads(self, chunks: "list[int]") -> None:
+        """Hand the planner's exact chunk-read schedule to the backend."""
+        if chunks:
+            self._backend.schedule_reads([self.chunk_path(k) for k in chunks])
+
+    @property
+    def has_schedule(self) -> bool:
+        """True while the backend is driven by an exact read schedule."""
+        return self._backend.scheduled_active
+
     def close(self) -> None:
         self._backend.close()
 

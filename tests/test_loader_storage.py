@@ -115,6 +115,31 @@ class TestRedoxLoader:
             for _ in loader.epoch_async(0):
                 pass
 
+    def test_async_loader_abandoned_consumer_joins_worker(self, tmp_path):
+        """Regression: breaking out of epoch_async mid-epoch must not leave
+        the worker thread blocked forever on a full queue."""
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(
+            cluster, sampler, batch_per_node=8, seq_len=32, queue_depth=1
+        )
+        gen = loader.epoch_async(0)
+        next(gen)  # queue is full and the worker is blocked on put()
+        gen.close()  # GeneratorExit -> shutdown signal -> join
+        assert loader._worker is not None
+        loader._worker.join(timeout=5.0)
+        assert not loader._worker.is_alive(), "worker thread leaked"
+
+    def test_async_loader_exception_in_consumer_joins_worker(self, tmp_path):
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(
+            cluster, sampler, batch_per_node=8, seq_len=32, queue_depth=1
+        )
+        with pytest.raises(RuntimeError, match="consumer bailed"):
+            for _ in loader.epoch_async(0):
+                raise RuntimeError("consumer bailed")
+        loader._worker.join(timeout=5.0)
+        assert not loader._worker.is_alive(), "worker thread leaked"
+
     def test_async_loader_same_order(self, tmp_path):
         ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
         loader = RedoxLoader(cluster, sampler, batch_per_node=16, seq_len=32)
