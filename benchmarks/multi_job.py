@@ -1,0 +1,161 @@
+"""Multi-job aggregate throughput: K jobs on one DataService vs K loaders.
+
+The paper's chunk layout is built once and "re-used to train different
+models"; this benchmark measures what that sharing is worth. K jobs (own
+seeds, own shuffles) run one real-bytes epoch each over the SAME chunk
+store, two ways:
+
+* **independent** — K separate ``RedoxLoader`` stacks, each opening the
+  store itself: storage sees ~K x the dataset in chunk reads;
+* **service** — one :class:`repro.service.DataService`, K sessions on the
+  shared round-robin pump: the shared residency serves every duplicate
+  chunk claim from cache, so storage sees ~1 x the dataset regardless of K
+  (strictly below K x the single-job bytes — the BENCH acceptance check).
+
+``--co-refill`` additionally steers refill tie-breaks toward shareable
+chunks. Reads go through a VFS backend with an emulated per-read NAS
+latency (this box page-caches everything; see ``io_overhead.py``), so wall
+times reflect storage work honestly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import ChunkStore, Cluster, EpochSampler, RedoxLoader, VFSBackend
+from repro.data import SyntheticTokenDataset
+from repro.service import DataService
+
+
+def _build_store(root: Path, *, num_docs: int, chunk_size: int, groups: int,
+                 mean_len: int, seed: int) -> ChunkStore:
+    ds = SyntheticTokenDataset(num_docs, vocab_size=32000, mean_len=mean_len, seed=seed)
+    return ds.build_store(
+        root, chunk_size, num_slots=groups * chunk_size, seed=seed + 1
+    )
+
+
+def _job_seed(seed: int, j: int) -> int:
+    return seed + 100 * j + 7
+
+
+def run_multi_job(
+    jobs: int = 3,
+    *,
+    num_docs: int = 768,
+    chunk_size: int = 8,
+    groups: int = 8,
+    mean_len: int = 96,
+    batch: int = 16,
+    seq_len: int = 64,
+    latency_ms: float = 0.5,
+    co_refill: bool = False,
+    seed: int = 0,
+) -> dict:
+    """One epoch, K jobs, independent vs service. Returns one BENCH row."""
+    with tempfile.TemporaryDirectory(prefix="redox_multijob_") as tmp:
+        root = Path(tmp) / "chunks"
+        _build_store(root, num_docs=num_docs, chunk_size=chunk_size,
+                     groups=groups, mean_len=mean_len, seed=seed)
+
+        def open_store():
+            return ChunkStore.open(root, backend=VFSBackend(latency_s=latency_ms / 1e3))
+
+        # --- K independent loaders (and job 0 doubles as the 1-job baseline)
+        indep_bytes, indep_reads, single_bytes = 0, 0, 0
+        t0 = time.perf_counter()
+        for j in range(jobs):
+            store = open_store()
+            cluster = Cluster(store.plan, 1, store=store, seed=_job_seed(seed, j))
+            sampler = EpochSampler(store.plan.num_files, 1, seed=_job_seed(seed, j) + 1)
+            loader = RedoxLoader(cluster, sampler, batch_per_node=batch, seq_len=seq_len)
+            for _ in loader.epoch(0):
+                pass
+            b = store.backend_stats
+            indep_bytes += b.bytes_read
+            indep_reads += b.chunk_reads
+            if j == 0:
+                single_bytes = b.bytes_read
+            store.close()
+        indep_wall = time.perf_counter() - t0
+
+        # --- one service, K co-scheduled sessions
+        store = open_store()
+        svc = DataService(store, co_refill=co_refill)
+        for j in range(jobs):
+            svc.open_session(
+                f"job{j}", seed=_job_seed(seed, j), batch_per_node=batch,
+                seq_len=seq_len,
+            )
+        t0 = time.perf_counter()
+        steps = sum(1 for _ in svc.co_epoch(0))
+        svc_wall = time.perf_counter() - t0
+        agg = svc.stats_report()["aggregate"]
+        svc_bytes = store.backend_stats.bytes_read
+        svc_reads = store.backend_stats.chunk_reads
+        svc.close()
+        store.close()
+
+    return dict(
+        jobs=jobs,
+        co_refill=co_refill,
+        steps=steps,
+        single_mb=single_bytes / 1e6,
+        indep_mb=indep_bytes / 1e6,
+        service_mb=svc_bytes / 1e6,
+        saving_x=indep_bytes / max(svc_bytes, 1),
+        indep_reads=indep_reads,
+        service_reads=svc_reads,
+        dup_loads_avoided=agg["dup_loads_avoided"],
+        co_refill_hits=agg["co_refill_hits"],
+        peak_cache_mb=agg["peak_cache_bytes"] / 1e6,
+        indep_wall_s=indep_wall,
+        service_wall_s=svc_wall,
+    )
+
+
+def print_table(rows: "list[dict]") -> None:
+    print(
+        f"{'jobs':>4s} {'co_refill':>9s} {'single_MB':>9s} {'K_indep_MB':>10s} "
+        f"{'service_MB':>10s} {'saving':>7s} {'dup_avoid':>9s} {'co_hits':>7s} "
+        f"{'indep_s':>8s} {'svc_s':>7s}"
+    )
+    for r in rows:
+        print(
+            f"{r['jobs']:4d} {str(r['co_refill']):>9s} {r['single_mb']:9.1f} "
+            f"{r['indep_mb']:10.1f} {r['service_mb']:10.1f} "
+            f"{r['saving_x']:6.1f}x {r['dup_loads_avoided']:9d} "
+            f"{r['co_refill_hits']:7d} {r['indep_wall_s']:8.2f} "
+            f"{r['service_wall_s']:7.2f}"
+        )
+
+
+def main(quick: bool = False) -> "list[dict]":
+    kw = dict(num_docs=384, mean_len=64) if quick else {}
+    rows = [run_multi_job(3, co_refill=False, **kw),
+            run_multi_job(3, co_refill=True, **kw)]
+    if not quick:
+        rows.append(run_multi_job(5, co_refill=True))
+    print_table(rows)
+    for r in rows:
+        k, single = r["jobs"], r["single_mb"]
+        assert r["service_mb"] < k * single, (
+            "shared residency failed to deduplicate reads: "
+            f"{r['service_mb']:.1f}MB !< {k} x {single:.1f}MB"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--co-refill", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.jobs == 3 and not args.co_refill:
+        main(quick=args.quick)
+    else:
+        print_table([run_multi_job(args.jobs, co_refill=args.co_refill)])

@@ -32,6 +32,7 @@ def main() -> None:
         chunk_size,
         convergence,
         io_overhead,
+        multi_job,
         overall,
         planner_speed,
         roofline_report,
@@ -76,6 +77,11 @@ def main() -> None:
         "Planner vs per-access epoch throughput",
         lambda: planner_speed.main(quick=args.quick),
         key="planner",
+    )
+    section(
+        "Multi-job data service: shared-cache aggregate throughput",
+        lambda: multi_job.main(quick=args.quick),
+        key="multi_job",
     )
     section("Figs 9-11: overall speedups", overall_section, key="overall")
     section("Tables 4+5: ablation breakdown", breakdown.main)

@@ -8,7 +8,7 @@ from .loader import RedoxLoader
 from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
-from .stats import NodeStats, PipelineTimeModel, PlannerStats, StepIO
+from .stats import NodeStats, PipelineTimeModel, PlannerStats, ServiceStats, StepIO
 from .storage import (
     BACKENDS,
     BackendStats,
@@ -44,6 +44,7 @@ __all__ = [
     "RemoteMemory",
     "RequestResult",
     "run_baseline_epoch",
+    "ServiceStats",
     "StepIO",
     "StorageBackend",
     "VFSBackend",

@@ -72,30 +72,41 @@ class RedoxLoader:
         seq_len: int,
         pad_id: int = 0,
         queue_depth: int = 2,
-        use_planner: bool = True,
+        use_planner: "bool | None" = None,
+        engine: "str | None" = None,
     ):
         assert cluster.num_nodes == sampler.num_nodes
+        if engine is None:
+            # Back-compat spelling: use_planner=True/False maps to the
+            # planned replay vs the batched live walk.
+            engine = "replay" if (use_planner is None or use_planner) else "step"
+        if engine not in ("replay", "step", "per_access"):
+            raise ValueError(f"unknown loader engine {engine!r}")
         self.cluster = cluster
         self.sampler = sampler
         self.batch_per_node = batch_per_node
         self.seq_len = seq_len
         self.pad_id = pad_id
         self.queue_depth = queue_depth
-        self.use_planner = use_planner
+        self.engine = engine
         self.last_plan = None       # EpochPlan of the most recent epoch
         self._worker: threading.Thread | None = None
+
+    @property
+    def use_planner(self) -> bool:
+        return self.engine == "replay"
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
         n = min(len(s) for s in self.sampler.node_sequences(epoch))
         return n // self.batch_per_node
 
     # ------------------------------------------------------------- epochs
-    def epoch(self, epoch: int):
+    def epoch(self, epoch: int, *, plan=None):
         """Yield GlobalBatch objects; runs protocol inline (deterministic)."""
-        for payloads, step, io_by_node in self._produce(epoch):
-            yield self._assemble(payloads, step, io_by_node)
+        for item in self._produce(epoch, plan=plan):
+            yield self._assemble(*item)
 
-    def epoch_async(self, epoch: int):
+    def epoch_async(self, epoch: int, *, plan=None):
         """Same batches, two-stage pipeline (double-buffered).
 
         Stage 1 (worker thread): protocol walk + chunk reads — with a
@@ -126,7 +137,7 @@ class RedoxLoader:
 
         def worker():
             try:
-                for item in self._produce(epoch):
+                for item in self._produce(epoch, plan=plan):
                     if not put(item):
                         return
             except BaseException as e:  # re-raised on the consumer side
@@ -157,7 +168,13 @@ class RedoxLoader:
             raise failure[0]
 
     # ------------------------------------------------------------ internals
-    def _assemble(self, payloads, step: int, io_by_node: dict[int, StepIO]):
+    def _assemble(
+        self,
+        payloads,
+        step: int,
+        io_by_node: dict[int, StepIO],
+        returned: "list[np.ndarray] | None" = None,
+    ):
         """Decode raw record payloads and pack the fixed-shape grid."""
         flat = [decode_record(p) for p in payloads]
         tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
@@ -167,26 +184,39 @@ class RedoxLoader:
             loss_mask=mask[:, 1:],
             step=step,
             io_by_node=io_by_node,
+            # The redirected file ids behind each grid row, in row order —
+            # lets equivalence/FT tests compare streams without re-decoding.
+            returned=(
+                np.concatenate(returned)
+                if returned is not None else np.empty(0, dtype=np.int64)
+            ),
         )
 
-    def _produce(self, epoch: int):
-        """Yield (raw payloads, step, io) per step — the plan/execute split.
+    def _produce(self, epoch: int, *, plan=None):
+        """Yield (payloads, step, io, returned) per step — plan/execute split.
 
-        Same plan-driven driver as ``Cluster.run_epoch``: with
-        ``use_planner`` the epoch is first computed in id-space
-        (:class:`EpochPlanner`), the exact chunk-read schedule is handed to
-        the storage backend, and the recorded events are replayed;
-        otherwise the batched live walk runs with heuristic readahead.
+        Same plan-driven driver as ``Cluster.run_epoch``: under the
+        ``"replay"`` engine the epoch is first computed in id-space
+        (:class:`EpochPlanner`) — or a pre-computed ``plan`` is passed in by
+        a :class:`repro.service.DataService`, which plans all of its
+        sessions at once — the exact chunk-read schedule is handed to the
+        storage backend, and the recorded events are replayed. The live
+        engines (``"step"`` batched / ``"per_access"`` reference) walk the
+        protocol directly with heuristic readahead.
         """
         cluster = self.cluster
         assert cluster.store is not None, (
             "RedoxLoader requires a Cluster built with a ChunkStore"
         )
-        if self.use_planner:
-            plan = EpochPlanner(cluster).plan(
-                self.sampler, epoch, self.batch_per_node, stepping="floor_tail"
-            )
+        if self.engine == "replay":
+            if plan is None:
+                plan = EpochPlanner(cluster).plan(
+                    self.sampler, epoch, self.batch_per_node, stepping="floor_tail"
+                )
             self.last_plan = plan
+            # Per-plan hit attribution is a delta over the (possibly shared)
+            # backend's counters — exact for a lone loader, approximate when
+            # service sessions run concurrently over one backend.
             b = cluster.backend_stats
             before = (b.scheduled_hits, b.prefetch_hits)
             stream = cluster.replay_stream(
@@ -197,10 +227,10 @@ class RedoxLoader:
             plan, before = None, None
             stream = cluster.epoch_stream(
                 self.sampler, epoch, self.batch_per_node,
-                stepping="floor_tail", collect_payloads=True,
+                stepping="floor_tail", engine=self.engine, collect_payloads=True,
             )
-        for step, _, payloads, io_by_node in stream:
-            yield payloads, step, io_by_node
+        for step, returned, payloads, io_by_node in stream:
+            yield payloads, step, io_by_node, returned
         if plan is not None:
             b = cluster.backend_stats
             plan.stats.scheduled_read_hits = b.scheduled_hits - before[0]

@@ -182,6 +182,83 @@ class EpochPlan:
             out[r] = StepIO(**{f: int(v) for f, v in zip(_IO_FIELDS, vals)})
         return out
 
+    @staticmethod
+    def from_recorder(
+        rec: "PlanRecorder",
+        *,
+        epoch: int,
+        batch_per_node: int,
+        num_nodes: int,
+        stepping: str,
+        num_steps: int,
+        node_stats: "list[NodeStats]",
+    ) -> "EpochPlan":
+        """Assemble a plan from a recorded epoch walk.
+
+        Shared by :class:`EpochPlanner` (solo shadow walk) and the data
+        service's joint planner (``repro/service``), which interleaves many
+        shadow clusters and therefore drives the streams itself.
+        """
+        has_tail = len(rec.returned) > num_steps
+
+        returned_flat, returned_offsets = [], []
+        for r in range(num_nodes):
+            per_step = [s[r] for s in rec.returned]
+            offs = np.zeros(len(per_step) + 1, dtype=np.int64)
+            np.cumsum([p.size for p in per_step], out=offs[1:])
+            returned_flat.append(
+                np.concatenate(per_step) if per_step else np.empty(0, np.int64)
+            )
+            returned_offsets.append(offs)
+
+        file_counts = [f.size for f in rec.load_files]
+        load_files_offsets = np.zeros(len(file_counts) + 1, dtype=np.int64)
+        np.cumsum(file_counts, out=load_files_offsets[1:])
+
+        io_grid = np.zeros(
+            (len(rec.step_io), num_nodes, len(_IO_FIELDS)), dtype=np.int64
+        )
+        io_present = np.zeros((len(rec.step_io), num_nodes), dtype=bool)
+        for s, io_by_node in enumerate(rec.step_io):
+            for r, io in io_by_node.items():
+                io_present[s, r] = True
+                io_grid[s, r] = [getattr(io, f) for f in _IO_FIELDS]
+
+        plan = EpochPlan(
+            epoch=epoch,
+            batch_per_node=batch_per_node,
+            num_nodes=num_nodes,
+            stepping=stepping,
+            num_steps=num_steps,
+            has_tail=has_tail,
+            returned_flat=returned_flat,
+            returned_offsets=returned_offsets,
+            load_step=np.asarray(rec.load_step, dtype=np.int64),
+            load_owner=np.asarray(rec.load_owner, dtype=np.int64),
+            load_chunk=np.asarray(rec.load_chunk, dtype=np.int64),
+            load_fill_rate=np.asarray(rec.load_fill_rate, dtype=np.float64),
+            load_files_flat=(
+                np.concatenate(rec.load_files)
+                if rec.load_files else np.empty(0, np.int64)
+            ),
+            load_files_offsets=load_files_offsets,
+            ship_step=np.asarray(rec.ship_step, dtype=np.int64),
+            ship_src=np.asarray(rec.ship_src, dtype=np.int64),
+            ship_dst=np.asarray(rec.ship_dst, dtype=np.int64),
+            ship_file=np.asarray(rec.ship_file, dtype=np.int64),
+            ship_loc=np.asarray(rec.ship_loc, dtype=np.int64),
+            io_grid=io_grid,
+            io_nodes_present=io_present,
+            node_stats=[s.copy() for s in node_stats],
+        )
+        plan.stats = PlannerStats(
+            planned_steps=num_steps,
+            planned_accesses=sum(int(f.size) for f in returned_flat),
+            planned_chunk_loads=int(plan.load_chunk.size),
+            planned_ships=int(plan.ship_file.size),
+        )
+        return plan
+
     def validate(
         self,
         cluster: Cluster,
@@ -238,64 +315,14 @@ class EpochPlanner:
             stepping=stepping, recorder=rec, failures=failures,
         ):
             steps = step + 1
-        has_tail = len(rec.returned) > steps
-        num_nodes = shadow.num_nodes
-
-        returned_flat, returned_offsets = [], []
-        for r in range(num_nodes):
-            per_step = [s[r] for s in rec.returned]
-            offs = np.zeros(len(per_step) + 1, dtype=np.int64)
-            np.cumsum([p.size for p in per_step], out=offs[1:])
-            returned_flat.append(
-                np.concatenate(per_step) if per_step else np.empty(0, np.int64)
-            )
-            returned_offsets.append(offs)
-
-        file_counts = [f.size for f in rec.load_files]
-        load_files_offsets = np.zeros(len(file_counts) + 1, dtype=np.int64)
-        np.cumsum(file_counts, out=load_files_offsets[1:])
-
-        io_grid = np.zeros(
-            (len(rec.step_io), num_nodes, len(_IO_FIELDS)), dtype=np.int64
-        )
-        io_present = np.zeros((len(rec.step_io), num_nodes), dtype=bool)
-        for s, io_by_node in enumerate(rec.step_io):
-            for r, io in io_by_node.items():
-                io_present[s, r] = True
-                io_grid[s, r] = [getattr(io, f) for f in _IO_FIELDS]
-
-        plan = EpochPlan(
+        plan = EpochPlan.from_recorder(
+            rec,
             epoch=epoch,
             batch_per_node=batch_per_node,
-            num_nodes=num_nodes,
+            num_nodes=shadow.num_nodes,
             stepping=stepping,
             num_steps=steps,
-            has_tail=has_tail,
-            returned_flat=returned_flat,
-            returned_offsets=returned_offsets,
-            load_step=np.asarray(rec.load_step, dtype=np.int64),
-            load_owner=np.asarray(rec.load_owner, dtype=np.int64),
-            load_chunk=np.asarray(rec.load_chunk, dtype=np.int64),
-            load_fill_rate=np.asarray(rec.load_fill_rate, dtype=np.float64),
-            load_files_flat=(
-                np.concatenate(rec.load_files)
-                if rec.load_files else np.empty(0, np.int64)
-            ),
-            load_files_offsets=load_files_offsets,
-            ship_step=np.asarray(rec.ship_step, dtype=np.int64),
-            ship_src=np.asarray(rec.ship_src, dtype=np.int64),
-            ship_dst=np.asarray(rec.ship_dst, dtype=np.int64),
-            ship_file=np.asarray(rec.ship_file, dtype=np.int64),
-            ship_loc=np.asarray(rec.ship_loc, dtype=np.int64),
-            io_grid=io_grid,
-            io_nodes_present=io_present,
-            node_stats=[n.stats.copy() for n in shadow.nodes],
+            node_stats=[n.stats for n in shadow.nodes],
         )
-        plan.stats = PlannerStats(
-            plan_time_s=time.perf_counter() - t0,
-            planned_steps=steps,
-            planned_accesses=sum(int(f.size) for f in returned_flat),
-            planned_chunk_loads=int(plan.load_chunk.size),
-            planned_ships=int(plan.ship_file.size),
-        )
+        plan.stats.plan_time_s = time.perf_counter() - t0
         return plan

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["NodeStats", "PipelineTimeModel", "PlannerStats", "StepIO"]
+__all__ = ["NodeStats", "PipelineTimeModel", "PlannerStats", "ServiceStats", "StepIO"]
 
 
 @dataclasses.dataclass
@@ -82,6 +82,40 @@ class PlannerStats:
     planned_ships: int = 0         # opportunistic prefetch ships scheduled
     scheduled_read_hits: int = 0   # backend reads served by the exact schedule
     heuristic_prefetch_hits: int = 0  # reads served by heuristic readahead
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Shared-residency counters for one job (or, merged, for a whole
+    :class:`repro.service.DataService`).
+
+    ``shared_hits`` are chunk claims served from the shared cache — each one
+    is a duplicate disk read avoided (``dup_loads_avoided`` is the same
+    quantity under the paper-facing name). ``physical_*`` are the reads that
+    actually reached the storage backend on behalf of this job.
+    """
+
+    physical_reads: int = 0    # chunk reads that hit the storage backend
+    physical_bytes: int = 0
+    shared_hits: int = 0       # chunk claims served from the shared cache
+    shared_bytes: int = 0      # bytes of those claims (reads avoided)
+    co_refill_hits: int = 0    # refill choices steered by the co-refill hook
+    evictions: int = 0         # cache-limit evictions (claims may re-read)
+    peak_cache_bytes: int = 0  # high-water mark of shared cache residency
+
+    @property
+    def dup_loads_avoided(self) -> int:
+        return self.shared_hits
+
+    def merge(self, other: "ServiceStats") -> "ServiceStats":
+        out = ServiceStats()
+        for f in dataclasses.fields(ServiceStats):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            setattr(out, f.name, max(a, b) if f.name.startswith("peak") else a + b)
+        return out
+
+    def copy(self) -> "ServiceStats":
+        return dataclasses.replace(self)
 
 
 @dataclasses.dataclass

@@ -19,7 +19,13 @@ instance for custom tuning (``ParallelBackend(workers=8, readahead=16)``).
 from .base import BackendStats, StorageBackend
 from .mapped import MmapBackend
 from .parallel import ParallelBackend
-from .store import BACKENDS, ChunkStore, make_backend
+from .store import (
+    BACKENDS,
+    ChunkStore,
+    first_read_order,
+    make_backend,
+    merge_read_schedules,
+)
 from .vfs import VFSBackend
 
 __all__ = [
@@ -30,5 +36,7 @@ __all__ = [
     "ParallelBackend",
     "StorageBackend",
     "VFSBackend",
+    "first_read_order",
     "make_backend",
+    "merge_read_schedules",
 ]

@@ -28,7 +28,52 @@ from .mapped import MmapBackend
 from .parallel import ParallelBackend
 from .vfs import VFSBackend
 
-__all__ = ["ChunkStore", "BACKENDS", "make_backend"]
+__all__ = [
+    "ChunkStore",
+    "BACKENDS",
+    "make_backend",
+    "merge_read_schedules",
+    "first_read_order",
+]
+
+
+def merge_read_schedules(per_session_steps: "list[list[list[int]]]") -> "list[int]":
+    """Merge per-session, per-step chunk-read schedules into one global order.
+
+    ``per_session_steps[j][s]`` is the list of chunk ids session ``j`` reads
+    during its step ``s``. The merge interleaves by step — for each step,
+    every session's loads in session order — which is exactly the claim
+    order produced by a round-robin serving pump driving the sessions in
+    lockstep (``repro.service.DataService.co_epoch``). Duplicates are kept:
+    this is the *claim* schedule; :func:`first_read_order` derives the
+    physical read schedule a shared refcounted cache actually issues.
+    """
+    merged: "list[int]" = []
+    depth = max((len(steps) for steps in per_session_steps), default=0)
+    for s in range(depth):
+        for steps in per_session_steps:
+            if s < len(steps):
+                merged.extend(steps[s])
+    return merged
+
+
+def first_read_order(claims: "list[int]") -> "list[int]":
+    """Physical read order of a claim schedule under a refcounted cache.
+
+    With release-on-last-claim refcounts (``repro.service.SharedResidency``)
+    a chunk stays cache-resident from its first claim until its last, so
+    only each chunk's *first* occurrence reaches storage — later claims,
+    including a job's own repeat loads, are shared hits. The result is what
+    the service hands to ``ChunkStore.schedule_reads`` as the backend's
+    exact readahead schedule.
+    """
+    seen: "set[int]" = set()
+    order: "list[int]" = []
+    for k in claims:
+        if k not in seen:
+            seen.add(k)
+            order.append(k)
+    return order
 
 BACKENDS = {
     "vfs": VFSBackend,

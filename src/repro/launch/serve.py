@@ -1,6 +1,11 @@
 """Serving launcher: batched prefill + decode for any decode-capable arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --new-tokens 16
+
+``--list-archs`` prints every registered arch with its serving capability
+and exits 0 (the sanctioned way to probe for encoder-only archs from
+scripts); asking to *serve* an encoder-only arch remains exit code 1.
+``--seed`` makes the random prompts and parameter init reproducible.
 """
 
 from __future__ import annotations
@@ -19,12 +24,26 @@ from ..train.train_step import build_decode_step, build_prefill_step
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--arch", choices=list_archs(),
+                    help="arch to serve (required unless --list-archs)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for prompts and parameter init")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--list-archs", action="store_true",
+                    help="list archs and their serving capability, exit 0")
     args = ap.parse_args()
+
+    if args.list_archs:
+        # Explicit listing: encoder-only archs are information, not misuse.
+        for arch in list_archs():
+            kind = "decode" if get_config(arch).supports_decode() else "encoder-only"
+            print(f"{arch}: {kind}")
+        return 0
+    if args.arch is None:
+        ap.error("--arch is required unless --list-archs is given")
 
     cfg = get_config(args.arch)
     if not cfg.supports_decode():
@@ -33,8 +52,8 @@ def main() -> int:
     if not args.full:
         cfg = reduced(cfg)
     model = build_model(cfg)
-    values, _ = split_params(model.init(0))
-    rng = np.random.default_rng(0)
+    values, _ = split_params(model.init(args.seed))
+    rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )

@@ -1,0 +1,17 @@
+"""Multi-job data service: one shared chunk cache serving N training jobs.
+
+See :mod:`repro.service.service` for the architecture. Quick tour::
+
+    store = ChunkStore.open(root)
+    svc = DataService(store, co_refill=True)
+    for j in range(3):
+        svc.open_session(f"job{j}", seed=j, batch_per_node=16, seq_len=128)
+    for job_id, batch in svc.co_epoch(epoch=0):
+        ...  # each job's stream is its own uniform exactly-once shuffle
+    print(svc.stats_report()["aggregate"])  # shared_hits, dup_loads_avoided
+"""
+
+from .residency import SharedResidency, session_still_needs
+from .service import DataService, JobSession
+
+__all__ = ["DataService", "JobSession", "SharedResidency", "session_still_needs"]

@@ -1,0 +1,271 @@
+"""Shared chunk residency: one refcounted byte cache serving many jobs.
+
+The paper's one-time chunk layout is explicitly multi-job ("the pre-organized
+data chunks can be re-used to train different models"), and FanStore
+(PAPERS.md) shows that a shared, deduplicated cache across trainers is where
+the large-scale I/O wins are. :class:`SharedResidency` is that cache for a
+:class:`repro.service.DataService`: every session's ``read_chunk`` claims go
+through it, and a chunk's bytes are read from storage exactly once per
+*residency interval* — from its first claim to its last — no matter how many
+jobs consume it.
+
+Two release disciplines, matching the service's two execution modes:
+
+* **Planned refcounts** (replay sessions): ``install_claims`` registers each
+  job's exact per-chunk claim counts (from its :class:`EpochPlan`). A chunk
+  is released the moment its last planned claim is served — Belady-exact,
+  because the plans *are* the future.
+* **Liveness** (live ``step``/``per_access`` sessions): a chunk is retained
+  while any live session still *needs* it — session ``s`` will load chunk
+  ``k`` again iff some file of ``k`` is neither consumed nor resident at
+  ``k``'s owner node (a file can only enter memory through its own chunk's
+  load). The probe runs at claim time, *before* the claiming session merges
+  the chunk into its abstract memory, so live-mode retention is a
+  conservative over-approximation: within an epoch it can grow toward the
+  dataset size (released at the end-of-epoch sweep) — bound it with
+  ``cache_limit_bytes`` when that matters. Replay sessions (the default
+  engine) use the exact planned refcounts instead.
+
+An optional ``cache_limit_bytes`` bounds residency; over-limit inserts evict
+least-recently-claimed entries (their remaining claims fall back to physical
+re-reads, counted in :class:`ServiceStats.evictions`).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from ..core.stats import ServiceStats
+
+__all__ = ["SharedResidency", "session_still_needs"]
+
+
+def session_still_needs(cluster, chunk: int) -> bool:
+    """Exact liveness test: will ``cluster`` load ``chunk`` again this epoch?
+
+    True iff some member file is neither consumed nor currently resident at
+    the chunk's owner node. Residency can only be created by loading the
+    chunk itself (redirection changes *which* file a slot returns, never
+    which chunk a file lives in), so this is an iff, not an approximation.
+    """
+    plan = cluster.plan
+    g = int(plan.group_of_chunk[chunk])
+    node = cluster.nodes[int(cluster.owner_of_group[g])]
+    files = plan.chunk_files[chunk]
+    locs = g * plan.chunk_size + np.arange(plan.chunk_size)
+    need = (
+        plan.chunk_valid[chunk]
+        & ~node.consumed[plan.chunk_files_clipped[chunk]]
+        & (node.memory.resident_flat[locs] != files)
+    )
+    return bool(need.any())
+
+
+class _Entry:
+    __slots__ = ("records", "nbytes", "seq")
+
+    def __init__(self, records, nbytes: int, seq: int):
+        self.records = records
+        self.nbytes = nbytes
+        self.seq = seq
+
+
+class SharedResidency:
+    """Refcount/liveness-managed chunk-byte cache shared by all sessions."""
+
+    def __init__(self, store, *, cache_limit_bytes: "int | None" = None):
+        self.store = store
+        self.cache_limit_bytes = cache_limit_bytes
+        self._entries: "dict[int, _Entry]" = {}
+        self._inflight: "dict[int, threading.Event]" = {}
+        self._lock = threading.RLock()
+        # Planned mode: outstanding claim counts. _refs[k] sums every
+        # pool's remaining claims of chunk k; pools are keyed per
+        # (job, epoch) so jobs running different epochs concurrently never
+        # touch each other's accounting (chunk bytes are epoch-invariant,
+        # so cross-epoch refs sharing the one _refs map is correct).
+        self._refs: "dict[int, int]" = {}
+        self._claims_left: "dict[tuple, dict[int, int]]" = {}
+        # Live mode: callback(chunk) -> True while any live session needs it.
+        self._liveness = None
+        self._seq = 0
+        self.cache_bytes = 0
+        self.peak_cache_bytes = 0
+        self.evictions = 0
+        self._job_stats: "dict[object, ServiceStats]" = {}
+
+    # ------------------------------------------------------------ bookkeeping
+    def set_liveness(self, fn) -> None:
+        self._liveness = fn
+
+    def job_stats(self, job) -> ServiceStats:
+        with self._lock:
+            return self._job_stats.setdefault(job, ServiceStats())
+
+    @property
+    def per_job_stats(self) -> "dict[object, ServiceStats]":
+        with self._lock:
+            return dict(self._job_stats)
+
+    def is_cached(self, chunk: int) -> bool:
+        return chunk in self._entries
+
+    def has_claims(self) -> bool:
+        """True while any planned claims are outstanding."""
+        with self._lock:
+            return bool(self._refs)
+
+    def install_claims(self, job, epoch: int, counts: "dict[int, int]") -> None:
+        """Register ``job``'s planned per-chunk claim counts for ``epoch``
+        (the plan-time install — keep-first: an existing pool, possibly
+        partially drained by a running stream, is left untouched)."""
+        key = (job, int(epoch))
+        with self._lock:
+            if key in self._claims_left:
+                return
+            self._install_pool_locked(key, counts)
+
+    def begin_epoch_claims(self, job, epoch: int, counts: "dict[int, int]") -> None:
+        """Atomically retire ``job``'s claim pools up to and including the
+        epoch it is starting (drained ones from completed epochs, stale
+        ones from skipped or abandoned epochs) and install the exact pool
+        for that epoch. Pools for epochs the job has not reached yet are
+        kept — they may have been planned ahead and their refs are what
+        pins bytes for the job's future epochs. The sweep runs after the
+        install, so entries pinned by the old pool for the *same* epoch
+        stay resident through the swap (cross-epoch sharing)."""
+        key = (job, int(epoch))
+        with self._lock:
+            for stale in [
+                k for k in self._claims_left
+                if k[0] == job and k[1] <= int(epoch)
+            ]:
+                self._unwind_locked(stale)
+            self._install_pool_locked(key, counts)
+            self._sweep_locked()
+
+    def _install_pool_locked(self, key, counts: "dict[int, int]") -> None:
+        pool: "dict[int, int]" = {}
+        for k, n in counts.items():
+            k, n = int(k), int(n)
+            pool[k] = pool.get(k, 0) + n
+            self._refs[k] = self._refs.get(k, 0) + n
+        self._claims_left[key] = pool
+
+    def drop_claims(self, job, epoch: "int | None" = None) -> None:
+        """Unwind a job's outstanding claims (one epoch, or all of them for
+        a closed/killed job) and sweep the cache."""
+        with self._lock:
+            keys = [
+                key for key in self._claims_left
+                if key[0] == job and (epoch is None or key[1] == epoch)
+            ]
+            for key in keys:
+                self._unwind_locked(key)
+            self._sweep_locked()
+
+    def _unwind_locked(self, key) -> None:
+        for k, n in self._claims_left.pop(key, {}).items():
+            left = self._refs.get(k, 0) - n
+            if left > 0:
+                self._refs[k] = left
+            else:
+                self._refs.pop(k, None)
+
+    def end_epoch(self) -> None:
+        """Release everything no longer needed (planned refs drain to zero on
+        their own; live-mode entries are re-evaluated here because liveness
+        is only probed lazily, at claim time)."""
+        with self._lock:
+            self._sweep_locked()
+
+    # ----------------------------------------------------------------- claims
+    def read_chunk(self, job, chunk: int, *, epoch: "int | None" = None):
+        """Serve one chunk claim for ``job`` (consuming epoch ``epoch``):
+        shared-cache hit or physical read. Returns the store's
+        ``[(file_id, bytes), ...]`` records."""
+        chunk = int(chunk)
+        st = self.job_stats(job)
+        while True:
+            with self._lock:
+                e = self._entries.get(chunk)
+                if e is not None:
+                    self._note_claim_locked(job, epoch, chunk)
+                    st.shared_hits += 1
+                    st.shared_bytes += e.nbytes
+                    self._seq += 1
+                    e.seq = self._seq
+                    records = e.records
+                    self._maybe_release_locked(chunk)
+                    return records
+                ev = self._inflight.get(chunk)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[chunk] = ev
+                    break
+            # Another session is already reading this chunk; wait for its
+            # insert, then retry (shared hit, or read ourselves if it chose
+            # not to retain).
+            ev.wait()
+        try:
+            records = list(self.store.read_chunk(chunk))
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(chunk, None)
+            ev.set()
+            raise
+        nbytes = int(self.store.plan.chunk_bytes[chunk])
+        with self._lock:
+            self._note_claim_locked(job, epoch, chunk)
+            st.physical_reads += 1
+            st.physical_bytes += nbytes
+            self._inflight.pop(chunk, None)
+            if self._retain_locked(chunk):
+                self._insert_locked(chunk, records, nbytes)
+            ev.set()
+        return records
+
+    # -------------------------------------------------------------- internals
+    def _note_claim_locked(self, job, epoch: "int | None", chunk: int) -> None:
+        mine = None if epoch is None else self._claims_left.get((job, epoch))
+        if mine is None or chunk not in mine:
+            return  # live-mode claim (or unplanned repeat): liveness-driven
+        mine[chunk] -= 1
+        if mine[chunk] <= 0:
+            del mine[chunk]
+        left = self._refs.get(chunk, 0) - 1
+        if left > 0:
+            self._refs[chunk] = left
+        else:
+            self._refs.pop(chunk, None)
+
+    def _retain_locked(self, chunk: int) -> bool:
+        if self._refs.get(chunk, 0) > 0:
+            return True
+        return bool(self._liveness is not None and self._liveness(chunk))
+
+    def _maybe_release_locked(self, chunk: int) -> None:
+        if chunk in self._entries and not self._retain_locked(chunk):
+            self.cache_bytes -= self._entries.pop(chunk).nbytes
+
+    def _sweep_locked(self) -> None:
+        for chunk in list(self._entries):
+            self._maybe_release_locked(chunk)
+
+    def _insert_locked(self, chunk: int, records, nbytes: int) -> None:
+        limit = self.cache_limit_bytes
+        if limit is not None:
+            if nbytes > limit:
+                return  # a single chunk over the whole budget: never cache
+            while self._entries and self.cache_bytes + nbytes > limit:
+                lru = min(self._entries, key=lambda k: self._entries[k].seq)
+                self.cache_bytes -= self._entries.pop(lru).nbytes
+                self.evictions += 1
+            if self.cache_bytes + nbytes > limit:
+                return
+        self._seq += 1
+        self._entries[chunk] = _Entry(records, nbytes, self._seq)
+        self.cache_bytes += nbytes
+        self.peak_cache_bytes = max(self.peak_cache_bytes, self.cache_bytes)

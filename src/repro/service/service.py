@@ -1,0 +1,602 @@
+"""Multi-job data service: one chunk store + shared residency, N training jobs.
+
+Every layer below this one is single-job: a :class:`Cluster` owns its
+abstract memory, RNG stream, and epoch state. :class:`DataService` stacks N
+of those (one per job — each job keeps its *own* protocol state, sampler and
+seed, so its returned stream is exactly what it would be served solo) on top
+of ONE physical layer: a single :class:`ChunkStore` fronted by a
+:class:`SharedResidency` cache. Redirection is what makes the sharing cheap:
+jobs never coordinate *which file* a slot returns, only *which chunk bytes*
+back the slot — and those bytes are identical across jobs.
+
+Execution modes:
+
+* ``engine="replay"`` (default): :meth:`DataService.plan_epoch` runs the
+  clairvoyant :class:`EpochPlanner` per session, installs exact per-chunk
+  claim refcounts on the residency, merges every session's chunk-read
+  schedule (``merge_read_schedules``) and hands the deduplicated physical
+  order (``first_read_order``) to ``ChunkStore.schedule_reads`` — backend
+  readahead stays clairvoyant across *all* jobs at once.
+* ``engine="step" | "per_access"``: live walks; the residency retains chunks
+  by exact liveness instead of planned refcounts.
+
+**Co-refill** (``co_refill=True``): a pluggable refill-choice hook
+(:attr:`LocalNode.refill_filter`) narrows the protocol's uniform tie-break
+toward chunks that are already shared-cache resident (free bytes), else
+toward chunks another session still needs (the read it forces becomes a
+future shared hit). The preference is driven only by *other* jobs'
+independent permutations, so each job's returned stream remains a uniform
+shuffle (DESIGN.md §9; ``tests/test_randomness_property.py``). Off by
+default — with it off, every session's stream is byte-identical to its solo
+run, which is what the fault-tolerance tests pin down.
+
+:meth:`DataService.co_epoch` is the shared serving loop: a round-robin pump
+that advances every session one step per round (lockstep keeps claim order
+equal to the merged plan order) and yields ``(job_id, GlobalBatch)``.
+Sessions can instead be consumed independently — ``JobSession.epoch`` /
+``epoch_async`` are the familiar loader API — and still share bytes through
+the residency.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+
+from ..core.distributed import Cluster
+from ..core.loader import RedoxLoader
+from ..core.planner import EpochPlan, EpochPlanner, PlanRecorder
+from ..core.sampler import EpochSampler
+from ..core.stats import ServiceStats
+from ..core.storage import first_read_order, merge_read_schedules
+from .residency import SharedResidency, session_still_needs
+
+__all__ = ["DataService", "JobSession"]
+
+
+class _SessionStore:
+    """Per-session facade over the shared store: reads go through the
+    residency under the session's job id; the merged-schedule install is
+    service-owned, so the per-plan ``schedule_reads`` becomes a no-op."""
+
+    def __init__(self, service: "DataService", job_id):
+        self._service = service
+        self._job = job_id
+        self._real = service.store
+
+    @property
+    def plan(self):
+        return self._real.plan
+
+    @property
+    def backend_stats(self):
+        return self._real.backend_stats
+
+    @property
+    def wants_prefetch(self) -> bool:
+        return self._real.wants_prefetch
+
+    @property
+    def has_schedule(self) -> bool:
+        return self._real.has_schedule
+
+    def prefetch_chunks(self, chunks) -> None:
+        self._real.prefetch_chunks(chunks)
+
+    def read_chunk(self, chunk: int):
+        return self._service._read_chunk(self._job, chunk)
+
+    def read_file(self, file_id: int):
+        return self._real.read_file(file_id)
+
+    def schedule_reads(self, chunks) -> None:
+        pass  # the service installs ONE merged schedule on the real store
+
+    def close(self) -> None:
+        pass  # the service (or its creator) owns the real store
+
+
+class JobSession:
+    """One job's view of the service: a thin single-job loader session."""
+
+    def __init__(self, service: "DataService", job_id, cluster, sampler, loader):
+        self.service = service
+        self.job_id = job_id
+        self.cluster = cluster
+        self.sampler = sampler
+        self.loader = loader
+        self.closed = False
+
+    @property
+    def engine(self) -> str:
+        return self.loader.engine
+
+    @property
+    def last_plan(self):
+        return self.loader.last_plan
+
+    @property
+    def stats(self) -> ServiceStats:
+        """This job's shared-residency counters."""
+        return self.service.residency.job_stats(self.job_id)
+
+    def steps_per_epoch(self, epoch: int = 0) -> int:
+        return self.loader.steps_per_epoch(epoch)
+
+    def epoch(self, epoch: int):
+        """Yield this job's GlobalBatches. The service plans its epoch on
+        first touch, so independently consumed sessions still share bytes."""
+        for item in self._produce_guarded(epoch):
+            yield self.loader._assemble(*item)
+
+    def epoch_async(self, epoch: int):
+        """Double-buffered variant — safe to consume from a per-job thread;
+        the shared residency and the service planner are lock-protected.
+        For live (``step``/``per_access``) sessions under concurrent
+        threads, the liveness probe reads other sessions' evolving cluster
+        state unsynchronised: streams stay exact, but retention becomes
+        approximate (a stale read may cost a redundant re-read or hold a
+        chunk longer). Replay sessions (the default) use claim refcounts
+        and are exact under concurrency."""
+        plan = self._begin_epoch(epoch)
+        try:
+            yield from self.loader.epoch_async(epoch, plan=plan)
+        finally:
+            self._end_epoch(epoch)
+
+    def _produce_guarded(self, epoch: int):
+        """The session's raw step stream with claim bookkeeping around it
+        (shared by :meth:`epoch` and the service pump)."""
+        plan = self._begin_epoch(epoch)
+        try:
+            yield from self.loader._produce(epoch, plan=plan)
+        finally:
+            self._end_epoch(epoch)
+
+    def _begin_epoch(self, epoch: int):
+        """Resolve this epoch's plan and (re)install the job's exact claim
+        pool — full-epoch totals even when a previous run of the same epoch
+        was abandoned with the pool partially drained."""
+        svc = self.service
+        plan = svc._plan_for(self, epoch)
+        with svc._lock:
+            svc._active_epoch[self.job_id] = epoch
+            if plan is not None:
+                svc.residency.begin_epoch_claims(
+                    self.job_id, epoch, Counter(plan.load_chunk.tolist())
+                )
+        return plan
+
+    def _end_epoch(self, epoch: int) -> None:
+        """Retire this job's claim pool for ``epoch``: a completed epoch
+        drained it to zero (removing the key lets a re-run's plan-time
+        install register fresh full counts); an abandoned one left it
+        under-counting the remaining reads, so unwinding it keeps other
+        sessions' residency exact."""
+        svc = self.service
+        svc._active_epoch.pop(self.job_id, None)
+        svc.residency.drop_claims(self.job_id, epoch)
+
+    def close(self) -> None:
+        self.service.close_session(self.job_id)
+
+
+class DataService:
+    """One shared chunk cache serving many concurrent training jobs."""
+
+    def __init__(
+        self,
+        store,
+        *,
+        cache_limit_bytes: "int | None" = None,
+        co_refill: bool = False,
+    ):
+        self.store = store
+        self.plan = store.plan
+        self.co_refill = co_refill
+        self.residency = SharedResidency(store, cache_limit_bytes=cache_limit_bytes)
+        self.residency.set_liveness(self._live_sessions_need)
+        # Serialises planning and claim (un)installs: sessions consumed from
+        # concurrent threads must not interleave plan_epoch runs.
+        self._lock = threading.RLock()
+        self._sessions: "dict[object, JobSession]" = {}
+        # Plans are cached per epoch (pure functions of (session, epoch), so
+        # re-runs reuse them); only the newest few epochs are kept.
+        self._epoch_plans: "dict[int, dict[object, EpochPlan]]" = {}
+        self._active_epoch: "dict[object, int]" = {}
+        self.last_plan_time_s = 0.0
+
+    # ------------------------------------------------------------- sessions
+    def open_session(
+        self,
+        job_id,
+        *,
+        policy: str = "max_fill",
+        seed: int = 0,
+        sampler_seed: "int | None" = None,
+        num_nodes: int = 1,
+        batch_per_node: int = 8,
+        seq_len: int = 128,
+        pad_id: int = 0,
+        engine: str = "replay",
+        prefetch: bool = True,
+        prefetch_window: int = 64,
+        remote_memory_limit_bytes: int = 1 << 62,
+        queue_depth: int = 2,
+    ) -> JobSession:
+        """Open a job session with its own protocol state and RNG stream.
+
+        ``seed``/``policy``/``sampler_seed`` mean exactly what they mean for
+        a standalone ``Cluster`` + ``EpochSampler`` + ``RedoxLoader`` stack —
+        a single-session service run is byte-identical to that solo run
+        (``tests/test_service.py``).
+        """
+        with self._lock:
+            if job_id in self._sessions:
+                raise ValueError(f"job {job_id!r} already has an open session")
+        cluster = Cluster(
+            self.plan,
+            num_nodes,
+            policy=policy,
+            seed=seed,
+            store=_SessionStore(self, job_id),
+            prefetch=prefetch,
+            prefetch_window=prefetch_window,
+            remote_memory_limit_bytes=remote_memory_limit_bytes,
+        )
+        sampler = EpochSampler(
+            self.plan.num_files,
+            num_nodes,
+            seed=seed + 1 if sampler_seed is None else sampler_seed,
+        )
+        loader = RedoxLoader(
+            cluster,
+            sampler,
+            batch_per_node=batch_per_node,
+            seq_len=seq_len,
+            pad_id=pad_id,
+            queue_depth=queue_depth,
+            engine=engine,
+        )
+        session = JobSession(self, job_id, cluster, sampler, loader)
+        if self.co_refill:
+            self._install_refill_filter(session)
+        with self._lock:
+            if job_id in self._sessions:
+                raise ValueError(f"job {job_id!r} already has an open session")
+            # Copy-on-write: the residency's liveness callback iterates the
+            # session map from reader threads WITHOUT the service lock
+            # (taking it there would invert the residency/service lock
+            # order) — so mutations swap in a fresh dict instead.
+            self._sessions = {**self._sessions, job_id: session}
+        self.residency.job_stats(job_id)  # materialise the per-job counters
+        return session
+
+    def close_session(self, job_id) -> None:
+        """Close a session (mid-epoch kills included): its outstanding claim
+        refcounts are unwound so other jobs' residency is unaffected, and
+        the job id becomes reusable (a restarted job reopens under the same
+        id with fresh protocol state; its ServiceStats keep accumulating)."""
+        with self._lock:
+            session = self._sessions.get(job_id)
+            if session is None or session.closed:
+                return
+            remaining = dict(self._sessions)
+            del remaining[job_id]
+            self._sessions = remaining  # copy-on-write, see open_session
+            session.closed = True
+            self._active_epoch.pop(job_id, None)
+            for plans in self._epoch_plans.values():
+                plans.pop(job_id, None)
+            self.residency.drop_claims(job_id)
+
+    @property
+    def sessions(self) -> "list[JobSession]":
+        return [s for s in self._sessions.values() if not s.closed]
+
+    def session(self, job_id) -> JobSession:
+        return self._sessions[job_id]
+
+    def close(self) -> None:
+        for job_id in list(self._sessions):
+            self.close_session(job_id)
+        self.residency.end_epoch()
+
+    # ------------------------------------------------------------- planning
+    _PLAN_EPOCHS_KEPT = 4  # newest epochs whose plans/claims stay cached
+
+    def plan_epoch(self, epoch: int) -> "dict[object, EpochPlan]":
+        """Plan every replay session's epoch and fuse the I/O schedules.
+
+        Runs :class:`EpochPlanner` per session (jointly, on interleaved
+        shadow clusters, when co-refill is on — the hook's preferences are
+        themselves part of the plan), installs each session's exact claim
+        refcounts on the residency (keyed per (job, epoch) — jobs running
+        different epochs concurrently never disturb each other), and hands
+        the merged deduplicated physical read order to the storage backend.
+        Plans are cached; re-planning an epoch only fills sessions that do
+        not have a plan yet (e.g. opened later). Live-engine sessions are
+        skipped: their reads are not knowable up front and use liveness
+        retention instead.
+        """
+        t0 = time.perf_counter()
+        with self._lock:
+            sessions = [s for s in self.sessions if s.engine == "replay"]
+            if not sessions:
+                return {}
+            plans = self._epoch_plans.setdefault(epoch, {})
+            missing = [s for s in sessions if s.job_id not in plans]
+            if missing:
+                if self.co_refill and len(missing) > 1:
+                    fresh = self._joint_plan(missing, epoch)
+                else:
+                    fresh = {
+                        s.job_id: EpochPlanner(s.cluster).plan(
+                            s.sampler, epoch, s.loader.batch_per_node,
+                            stepping="floor_tail",
+                        )
+                        for s in missing
+                    }
+                plans.update(fresh)
+            claims = merge_read_schedules(
+                [_per_step_chunks(plans[s.job_id]) for s in sessions
+                 if s.job_id in plans]
+            )
+            for s in sessions:
+                if s.job_id in plans:
+                    self.residency.install_claims(
+                        s.job_id, epoch,
+                        Counter(plans[s.job_id].load_chunk.tolist()),
+                    )
+            # Installing a schedule REPLACES the backend's current one
+            # (discarding its in-flight readahead), so only do it while no
+            # session is mid-stream — a late planner (job opened/advancing
+            # while others run) must not clobber their exact readahead.
+            if not self._active_epoch:
+                self.store.schedule_reads(first_read_order(claims))
+            self._prune_plans_locked()
+            self.last_plan_time_s = time.perf_counter() - t0
+            return dict(plans)
+
+    def _prune_plans_locked(self) -> None:
+        while len(self._epoch_plans) > self._PLAN_EPOCHS_KEPT:
+            oldest = min(self._epoch_plans)
+            for job_id in self._epoch_plans.pop(oldest):
+                # never-started pools of the pruned epoch must not pin bytes
+                if self._active_epoch.get(job_id) != oldest:
+                    self.residency.drop_claims(job_id, oldest)
+
+    def _plan_for(self, session: JobSession, epoch: int):
+        """The session's plan for ``epoch``, planning the service's epoch on
+        first touch — independently consumed sessions (``JobSession.epoch``)
+        share bytes without the caller invoking :meth:`plan_epoch` by hand."""
+        if session.engine != "replay":
+            return None
+        with self._lock:
+            plan = self._epoch_plans.get(epoch, {}).get(session.job_id)
+            if plan is None:
+                plan = self.plan_epoch(epoch).get(session.job_id)
+            return plan
+
+    def _read_chunk(self, job_id, chunk: int):
+        """Session-store read path: claims land in the pool of the epoch the
+        job is currently consuming."""
+        return self.residency.read_chunk(
+            job_id, chunk, epoch=self._active_epoch.get(job_id)
+        )
+
+    def _joint_plan(self, sessions, epoch):
+        """Interleaved co-refill planning: every session's shadow cluster is
+        advanced one step per round (the pump's lockstep), with refill hooks
+        consulting a simulated shared cache and the other shadows' exact
+        liveness — so the plans already contain the co-refill decisions."""
+        shadows = [s.cluster.planning_clone() for s in sessions]
+        sim_cached: "set[int]" = set()
+
+        def shadow_needs(i: int, chunk: int) -> bool:
+            return session_still_needs(shadows[i], chunk)
+
+        def on_load(chunk: int) -> None:
+            # Retention re-check mirrors SharedResidency: cached while any
+            # shadow (including the loader, pre-release) still needs it.
+            if any(shadow_needs(i, chunk) for i in range(len(shadows))):
+                sim_cached.add(chunk)
+            else:
+                sim_cached.discard(chunk)
+
+        def make_filter(me: int):
+            def filt(group, chunk_ids):
+                return self._preferred_chunks(
+                    chunk_ids,
+                    cached=lambda k: k in sim_cached,
+                    wanted=lambda k: any(
+                        shadow_needs(i, k) for i in range(len(shadows)) if i != me
+                    ),
+                    job=sessions[me].job_id,
+                )
+            return filt
+
+        recs = []
+        for i, shadow in enumerate(shadows):
+            rec = _JointRecorder(on_load)
+            recs.append(rec)
+            for node in shadow.nodes:
+                node.refill_filter = make_filter(i)
+        gens = [
+            shadow.epoch_stream(
+                s.sampler, epoch, s.loader.batch_per_node,
+                stepping="floor_tail", recorder=recs[i],
+            )
+            for i, (s, shadow) in enumerate(zip(sessions, shadows))
+        ]
+        steps = [0] * len(sessions)
+        done = [False] * len(sessions)
+        while not all(done):
+            for i, gen in enumerate(gens):
+                if done[i]:
+                    continue
+                try:
+                    step, _, _, _ = next(gen)
+                    steps[i] = step + 1
+                except StopIteration:
+                    done[i] = True
+        plans = {}
+        for i, s in enumerate(sessions):
+            plan = EpochPlan.from_recorder(
+                recs[i],
+                epoch=epoch,
+                batch_per_node=s.loader.batch_per_node,
+                num_nodes=shadows[i].num_nodes,
+                stepping="floor_tail",
+                num_steps=steps[i],
+                node_stats=[n.stats for n in shadows[i].nodes],
+            )
+            plans[s.job_id] = plan
+        return plans
+
+    # ------------------------------------------------------------ co-refill
+    def _install_refill_filter(self, session: JobSession) -> None:
+        def filt(group, chunk_ids, _job=session.job_id):
+            return self._preferred_chunks(
+                chunk_ids,
+                cached=self.residency.is_cached,
+                wanted=lambda k: any(
+                    session_still_needs(s.cluster, k)
+                    for s in self.sessions
+                    if s.job_id != _job and s.engine != "replay"
+                ),
+                job=_job,
+            )
+        for node in session.cluster.nodes:
+            node.refill_filter = filt
+
+    def _preferred_chunks(self, chunk_ids, *, cached, wanted, job):
+        """Co-refill preference over the protocol's tie-break pool.
+
+        Only chunks some OTHER session still needs are ever preferred — the
+        preference is a function of the other jobs' (independent) states,
+        never of the choosing job's own history, which is what keeps each
+        job's stream a uniform shuffle (DESIGN.md §9) and makes a solo
+        session's co-refill a no-op (byte-identical to its solo run).
+        Among the other-needed candidates, ones whose bytes are already
+        shared-cache resident come first (consume before produce).
+        """
+        ids = [int(k) for k in np.asarray(chunk_ids).tolist()]
+        shareable = [k for k in ids if wanted(k)]
+        chosen = [k for k in shareable if cached(k)] or shareable
+        if not chosen or len(chosen) == len(ids):
+            return None  # no narrowing: tie-break stays untouched
+        self.residency.job_stats(job).co_refill_hits += 1
+        return np.asarray(chosen, dtype=np.int64)
+
+    def _live_sessions_need(self, chunk: int) -> bool:
+        """Residency liveness: some live-engine session still needs ``chunk``.
+        Replay sessions are excluded — their cluster state does not evolve
+        during replay; planned claim refcounts cover them exactly."""
+        return any(
+            session_still_needs(s.cluster, chunk)
+            for s in self.sessions
+            if s.engine != "replay"
+        )
+
+    # -------------------------------------------------------------- serving
+    def co_epoch(self, epoch: int):
+        """THE shared serving loop: round-robin pump over all open sessions.
+
+        Yields ``(job_id, GlobalBatch)``; each session advances one training
+        step per round, so co-scheduled jobs stay in lockstep and the claim
+        order matches the merged plan order (maximal schedule hits).
+        Sessions closed mid-epoch (``close_session``) are detached at the
+        next round; the survivors' streams are unaffected.
+        """
+        sessions = self.sessions
+        if any(s.engine == "replay" for s in sessions):
+            self.plan_epoch(epoch)  # cached plans reused; claims reinstalled
+        gens = {s.job_id: s._produce_guarded(epoch) for s in sessions}
+        live = list(sessions)
+        try:
+            while live:
+                for s in list(live):
+                    if s.closed:
+                        live.remove(s)
+                        gens[s.job_id].close()
+                        continue
+                    try:
+                        item = next(gens[s.job_id])
+                    except StopIteration:
+                        live.remove(s)
+                        continue
+                    yield s.job_id, s.loader._assemble(*item)
+        finally:
+            for s in live:  # consumer abandoned the pump mid-epoch
+                gens[s.job_id].close()
+                # close() on a never-started generator does not run its
+                # body, so _end_epoch never fires for sessions the pump
+                # had not reached — retire their plan-time claims here
+                # (a no-op for sessions whose generator did clean up).
+                self.residency.drop_claims(s.job_id, epoch)
+            self.residency.end_epoch()
+
+    # ---------------------------------------------------------------- stats
+    def aggregate_stats(self) -> ServiceStats:
+        out = ServiceStats()
+        for st in self.residency.per_job_stats.values():
+            out = out.merge(st)
+        out.peak_cache_bytes = self.residency.peak_cache_bytes
+        out.evictions = self.residency.evictions
+        return out
+
+    def stats_report(self) -> dict:
+        """Per-job and aggregate counters (the BENCH/CLI-facing view)."""
+        per_job = self.residency.per_job_stats
+        agg = self.aggregate_stats()
+        return {
+            "per_job": {
+                str(j): {
+                    "physical_reads": st.physical_reads,
+                    "physical_bytes": st.physical_bytes,
+                    "shared_hits": st.shared_hits,
+                    "shared_bytes": st.shared_bytes,
+                    "co_refill_hits": st.co_refill_hits,
+                }
+                for j, st in per_job.items()
+            },
+            "bytes_per_job": {
+                str(j): st.physical_bytes + st.shared_bytes
+                for j, st in per_job.items()
+            },
+            "aggregate": {
+                "physical_reads": agg.physical_reads,
+                "physical_bytes": agg.physical_bytes,
+                "shared_hits": agg.shared_hits,
+                "shared_bytes": agg.shared_bytes,
+                "dup_loads_avoided": agg.dup_loads_avoided,
+                "co_refill_hits": agg.co_refill_hits,
+                "evictions": agg.evictions,
+                "peak_cache_bytes": agg.peak_cache_bytes,
+            },
+        }
+
+
+class _JointRecorder(PlanRecorder):
+    """PlanRecorder that also reports each load to the joint-planning sim."""
+
+    def __init__(self, on_load_cb):
+        super().__init__()
+        self._cb = on_load_cb
+
+    def on_load(self, owner, chunk, fill_rate, files):
+        super().on_load(owner, chunk, fill_rate, files)
+        self._cb(int(chunk))
+
+
+def _per_step_chunks(plan: EpochPlan) -> "list[list[int]]":
+    """Plan loads bucketed by step (tail pseudo-step included)."""
+    depth = plan.num_steps + (1 if plan.has_tail else 0)
+    return [
+        plan.load_chunk[slice(*plan.load_range(step))].tolist()
+        for step in range(depth)
+    ]

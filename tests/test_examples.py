@@ -53,7 +53,7 @@ class TestExamples:
     def test_launcher_serve_cli(self):
         p = run_example(
             ["-m", "repro.launch.serve", "--arch", "deepseek-moe-16b",
-             "--new-tokens", "4", "--prompt-len", "8"]
+             "--new-tokens", "4", "--prompt-len", "8", "--seed", "3"]
         )
         assert p.returncode == 0, p.stderr[-1500:]
         assert "decoded 4 tok/seq" in p.stdout
@@ -62,3 +62,26 @@ class TestExamples:
         p = run_example(["-m", "repro.launch.serve", "--arch", "hubert-xlarge"])
         assert p.returncode == 1
         assert "encoder-only" in p.stdout
+
+    def test_launcher_serve_list_archs(self):
+        """Explicitly listing archs is the exit-0 path for encoder-only info
+        (serving an encoder-only arch stays exit 1, tested above)."""
+        p = run_example(["-m", "repro.launch.serve", "--list-archs"])
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "hubert-xlarge: encoder-only" in p.stdout
+        assert "tinyllama-1.1b: decode" in p.stdout
+        assert p.stdout.count("\n") >= 10  # every registered arch listed
+
+    def test_launcher_serve_requires_arch_without_listing(self):
+        p = run_example(["-m", "repro.launch.serve"])
+        assert p.returncode == 2  # argparse usage error, not a crash
+        assert "--arch is required" in p.stderr
+
+    def test_launcher_data_service_cli(self):
+        p = run_example(
+            ["-m", "repro.launch.data_service", "--jobs", "3", "--num-docs",
+             "256", "--batch", "16", "--seq-len", "48", "--co-refill"]
+        )
+        assert p.returncode == 0, p.stderr[-1500:]
+        assert "aggregate:" in p.stdout
+        assert "dup_loads_avoided" in p.stdout

@@ -146,6 +146,48 @@ def test_first_fill_choice_uniform_chi_square():
     assert chi2 < 70.0, f"first-fill choice looks non-uniform: chi2={chi2:.1f}"
 
 
+def test_two_job_service_co_refill_streams_stay_uniform(tmp_path):
+    """DESIGN.md §9: the co-refill hook narrows refill tie-breaks using only
+    *other* jobs' state — which is an independent uniform permutation — so
+    each job's returned stream must remain a uniform exactly-once shuffle.
+    Run a real 2-job service with co-refill for many epochs and check (a)
+    exactly-once per job per epoch and (b) the positional-flatness necessary
+    condition of uniformity (as in
+    ``test_returned_stream_positionally_unbiased``) for BOTH jobs."""
+    from repro.core import ChunkStore
+    from repro.data import SyntheticTokenDataset
+    from repro.service import DataService
+
+    n, epochs = 64, 240
+    ds = SyntheticTokenDataset(n, vocab_size=97, mean_len=12, seed=11)
+    store = ds.build_store(tmp_path / "chunks", 4, num_slots=8, seed=6)
+    store = ChunkStore.open(store.root)
+    svc = DataService(store, co_refill=True)
+    for j in range(2):
+        svc.open_session(
+            f"j{j}", seed=50 + 31 * j, batch_per_node=16, seq_len=16,
+            engine="step",
+        )
+    pos_sum = {f"j{j}": np.zeros(n) for j in range(2)}
+    for e in range(epochs):
+        streams = {f"j{j}": [] for j in range(2)}
+        for job_id, batch in svc.co_epoch(e):
+            streams[job_id].append(batch["returned"])
+        for job_id, chunks in streams.items():
+            ids = np.concatenate(chunks)
+            assert sorted(ids.tolist()) == list(range(n)), (e, job_id)
+            pos_sum[job_id][ids] += np.arange(n)
+    center = (n - 1) / 2
+    sigma = np.sqrt((n * n - 1) / 12 / epochs)
+    for job_id, sums in pos_sum.items():
+        mean_pos = sums / epochs
+        assert np.all(np.abs(mean_pos - center) < 5 * sigma), (
+            f"{job_id}: co-refill biased some file's serving position"
+        )
+    assert svc.aggregate_stats().co_refill_hits > 0  # the hook actually fired
+    store.close()
+
+
 def test_returned_stream_positionally_unbiased():
     """Theorem (§4.1): the *returned* stream is a uniform random permutation.
     Check a necessary condition: E[position of each file] is flat across

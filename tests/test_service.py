@@ -1,0 +1,393 @@
+"""Multi-job data service: equivalence, shared residency, fault tolerance.
+
+The service contract under test:
+
+* a single-session :class:`DataService` run is byte-identical (returned
+  ids, batches, load/ship events, StepIO counters) to a plain
+  ``RedoxLoader`` run with the same seed/policy — for the ``per_access``,
+  ``step``, and ``replay`` engines;
+* K co-scheduled jobs read strictly fewer bytes than K independent
+  loaders (shared residency actually deduplicates);
+* killing one job mid-epoch leaves every other session's stream
+  byte-identical to its solo run, and the shared cache drains.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkStore, Cluster, EpochSampler, ParallelBackend, RedoxLoader
+from repro.core.planner import PlanRecorder
+from repro.data import SyntheticTokenDataset
+from repro.ft.failures import FailureInjector, StragglerMonitor
+from repro.service import DataService
+
+pytestmark = pytest.mark.service
+
+NUM_DOCS = 192  # divisible by batch 16: no ragged tail, batches cover the epoch
+
+
+def build_store(tmp_path, name="chunks", backend="vfs"):
+    ds = SyntheticTokenDataset(NUM_DOCS, vocab_size=97, mean_len=48, seed=3)
+    store = ds.build_store(tmp_path / name, 4, num_slots=16, seed=1)
+    return ChunkStore.open(store.root, backend=backend)
+
+
+def plain_run(store, *, seed, sampler_seed, engine, nodes=1, batch=16):
+    cluster = Cluster(store.plan, nodes, store=store, seed=seed)
+    sampler = EpochSampler(NUM_DOCS, nodes, seed=sampler_seed)
+    loader = RedoxLoader(cluster, sampler, batch_per_node=batch, seq_len=32,
+                         engine=engine)
+    recorder = PlanRecorder() if engine != "replay" else None
+    batches = list(loader.epoch(0)) if recorder is None else None
+    if recorder is not None:
+        # live engines: capture load/ship events through the epoch recorder
+        stream = cluster.epoch_stream(
+            sampler, 0, batch, stepping="floor_tail", engine=engine,
+            collect_payloads=True, recorder=recorder,
+        )
+        batches = []
+        for step, returned, payloads, io_by_node in stream:
+            batches.append(loader._assemble(payloads, step, io_by_node, returned))
+    return cluster, loader, batches, recorder
+
+
+def assert_io_equal(a, b):
+    """StepIO dicts equal on every exact counter (read_wait_s is measured)."""
+    assert a.keys() == b.keys()
+    for r in a:
+        for f in ("chunk_loads", "disk_bytes", "file_reads", "net_messages",
+                  "net_bytes"):
+            assert getattr(a[r], f) == getattr(b[r], f), (r, f)
+
+
+def assert_node_stats_equal(a, b):
+    skip = ("read_wait_s", "peak_inflight_reads")
+    for na, nb in zip(a, b):
+        for f in dataclasses.fields(type(na)):
+            if f.name in skip:
+                continue
+            assert getattr(na, f.name) == getattr(nb, f.name), f.name
+
+
+class TestSingleSessionEquivalence:
+    @pytest.mark.parametrize("engine", ["replay", "step", "per_access"])
+    def test_byte_identical_to_plain_loader(self, tmp_path, engine):
+        store_a = build_store(tmp_path, "a")
+        _, plain_loader, plain_batches, _ = plain_run(
+            store_a, seed=2, sampler_seed=4, engine=engine
+        )
+
+        store_b = build_store(tmp_path, "b")
+        svc = DataService(store_b)
+        session = svc.open_session(
+            "solo", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32,
+            engine=engine,
+        )
+        svc.plan_epoch(0)
+        svc_batches = list(session.epoch(0))
+
+        assert len(plain_batches) == len(svc_batches)
+        for pb, sb in zip(plain_batches, svc_batches):
+            np.testing.assert_array_equal(pb["tokens"], sb["tokens"])
+            np.testing.assert_array_equal(pb["loss_mask"], sb["loss_mask"])
+            np.testing.assert_array_equal(pb["returned"], sb["returned"])
+            assert_io_equal(pb["io_by_node"], sb["io_by_node"])
+        if engine == "replay":
+            pa, pb = plain_loader.last_plan, session.last_plan
+            np.testing.assert_array_equal(pa.load_chunk, pb.load_chunk)
+            np.testing.assert_array_equal(pa.load_fill_rate, pb.load_fill_rate)
+            np.testing.assert_array_equal(pa.load_files_flat, pb.load_files_flat)
+            np.testing.assert_array_equal(pa.ship_file, pb.ship_file)
+            np.testing.assert_array_equal(pa.io_grid, pb.io_grid)
+
+    def test_solo_co_refill_is_a_no_op(self, tmp_path):
+        """The co-refill preference only ever narrows toward chunks some
+        OTHER session needs, so a solo session with co_refill=True stays
+        byte-identical to its solo run (no self-history bias)."""
+        store_a = build_store(tmp_path, "a")
+        _, _, plain_batches, _ = plain_run(
+            store_a, seed=2, sampler_seed=4, engine="step"
+        )
+        store_b = build_store(tmp_path, "b")
+        svc = DataService(store_b, co_refill=True)
+        session = svc.open_session(
+            "solo", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32,
+            engine="step",
+        )
+        svc_batches = list(session.epoch(0))
+        for pb, sb in zip(plain_batches, svc_batches):
+            np.testing.assert_array_equal(pb["returned"], sb["returned"])
+        assert session.stats.co_refill_hits == 0
+
+    @pytest.mark.parametrize("engine", ["step", "per_access"])
+    def test_live_event_stream_identical(self, tmp_path, engine):
+        """Load/ship events of a multi-node live session match the plain
+        cluster walk exactly (the recorder-level view of 'byte-identical')."""
+        store_a = build_store(tmp_path, "a")
+        c_a, _, _, rec_a = plain_run(
+            store_a, seed=2, sampler_seed=4, engine=engine, nodes=2, batch=8
+        )
+        store_b = build_store(tmp_path, "b")
+        svc = DataService(store_b)
+        session = svc.open_session(
+            "solo", seed=2, sampler_seed=4, num_nodes=2, batch_per_node=8,
+            seq_len=32, engine=engine,
+        )
+        rec_b = PlanRecorder()
+        stream = session.cluster.epoch_stream(
+            session.sampler, 0, 8, stepping="floor_tail", engine=engine,
+            collect_payloads=True, recorder=rec_b,
+        )
+        for _ in stream:
+            pass
+        assert rec_a.load_chunk == rec_b.load_chunk
+        assert rec_a.load_step == rec_b.load_step
+        assert rec_a.ship_file == rec_b.ship_file
+        assert rec_a.ship_loc == rec_b.ship_loc
+        assert_node_stats_equal(
+            [n.stats for n in c_a.nodes], [n.stats for n in session.cluster.nodes]
+        )
+
+
+class TestSharedResidency:
+    def test_sequential_sessions_share_bytes(self, tmp_path):
+        """Independently consumed sessions share bytes with no explicit
+        plan_epoch call (the service plans on first touch): job B's whole
+        epoch is served from job A's physical reads."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        a = svc.open_session("a", seed=2, batch_per_node=16, seq_len=32)
+        b = svc.open_session("b", seed=9, batch_per_node=16, seq_len=32)
+        for _ in a.epoch(0):
+            pass
+        for _ in b.epoch(0):
+            pass
+        svc.residency.end_epoch()
+        assert a.stats.physical_reads > 0
+        assert b.stats.physical_reads == 0  # fully served from the cache
+        assert b.stats.shared_hits > 0
+        assert svc.residency.cache_bytes == 0  # refcounts drained
+
+    @pytest.mark.parametrize("bail_at", [0, 5])
+    def test_abandoned_pump_rerun_is_clean(self, tmp_path, bail_at):
+        """Breaking out of co_epoch mid-epoch must not leave claims behind —
+        neither partially drained pools (bail mid-round) nor plan-time pools
+        of sessions whose generator never even started (bail at the first
+        batch) — and the re-run still deduplicates down to one physical
+        read per chunk."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        for j in range(2):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32)
+        for i, _ in enumerate(svc.co_epoch(0)):
+            if i == bail_at:
+                break  # consumer bails mid-epoch
+        assert not svc.residency.has_claims()
+        assert svc.residency.cache_bytes == 0  # nothing left pinned
+        before = store.backend_stats.chunk_reads
+        for _ in svc.co_epoch(0):
+            pass
+        reads = store.backend_stats.chunk_reads - before
+        assert reads == store.plan.num_chunks  # one physical read per chunk
+        assert svc.residency.cache_bytes == 0
+
+    @pytest.mark.parametrize("co_refill", [False, True])
+    def test_pump_dedupes_and_stays_exactly_once(self, tmp_path, co_refill):
+        single = build_store(tmp_path, "single")
+        _, _, batches, _ = plain_run(single, seed=107, sampler_seed=108, engine="replay")
+        single_bytes = single.backend_stats.bytes_read
+        assert single_bytes > 0
+
+        store = build_store(tmp_path, "svc")
+        svc = DataService(store, co_refill=co_refill)
+        jobs = 3
+        for j in range(jobs):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32)
+        returned = {f"j{j}": [] for j in range(jobs)}
+        for job_id, batch in svc.co_epoch(0):
+            returned[job_id].append(batch["returned"])
+        for job_id, chunks in returned.items():
+            ids = np.concatenate(chunks)
+            assert sorted(ids.tolist()) == list(range(NUM_DOCS)), job_id
+        agg = svc.aggregate_stats()
+        assert agg.dup_loads_avoided > 0
+        # the acceptance bound: K co-scheduled jobs strictly below K x solo
+        assert store.backend_stats.bytes_read < jobs * single_bytes
+        if co_refill:
+            assert agg.co_refill_hits > 0
+        assert svc.residency.cache_bytes == 0
+
+    def test_merged_schedule_drives_backend_readahead(self, tmp_path):
+        """plan_epoch's merged physical schedule makes every parallel-backend
+        read a scheduled hit — clairvoyance survives multi-tenancy."""
+        store = build_store(tmp_path, backend=ParallelBackend(workers=2))
+        svc = DataService(store)
+        for j in range(3):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32)
+        for _ in svc.co_epoch(0):
+            pass
+        b = store.backend_stats
+        assert b.chunk_reads > 0
+        assert b.scheduled_hits == b.chunk_reads
+        store.close()
+
+    def test_cache_limit_evicts_but_streams_survive(self, tmp_path):
+        store = build_store(tmp_path)
+        limit = int(store.plan.chunk_bytes.max()) * 3
+        svc = DataService(store, cache_limit_bytes=limit)
+        for j in range(2):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32)
+        returned = {f"j{j}": [] for j in range(2)}
+        for job_id, batch in svc.co_epoch(0):
+            returned[job_id].append(batch["returned"])
+        for job_id, chunks in returned.items():
+            ids = np.concatenate(chunks)
+            assert sorted(ids.tolist()) == list(range(NUM_DOCS)), job_id
+        assert svc.residency.peak_cache_bytes <= limit
+        assert svc.residency.evictions > 0
+
+    def test_concurrent_threads_share_and_stay_clean(self, tmp_path):
+        """Two sessions consumed from separate threads (epoch_async): claim
+        pools are installed/unwound under the service lock, so refcounts
+        stay exact — each chunk is read physically once, streams stay
+        exactly-once, and nothing is left pinned."""
+        import threading
+
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        sessions = [
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16,
+                             seq_len=32)
+            for j in range(2)
+        ]
+        returned = {s.job_id: [] for s in sessions}
+
+        def consume(s):
+            for batch in s.epoch_async(0):
+                returned[s.job_id].append(batch["returned"])
+
+        threads = [threading.Thread(target=consume, args=(s,)) for s in sessions]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for job_id, chunks in returned.items():
+            ids = np.concatenate(chunks)
+            assert sorted(ids.tolist()) == list(range(NUM_DOCS)), job_id
+        svc.residency.end_epoch()
+        assert not svc.residency.has_claims()
+        assert svc.residency.cache_bytes == 0
+        assert store.backend_stats.chunk_reads == store.plan.num_chunks
+
+    def test_sessions_at_different_epochs_stay_exact(self, tmp_path):
+        """Claim pools are keyed per (job, epoch): a job mid-epoch-0 is not
+        disturbed when another job plans/runs epoch 1, and cross-epoch
+        retention lets the straggler's later epoch ride the fast job's
+        reads (chunk bytes are epoch-invariant)."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        a = svc.open_session("a", seed=2, batch_per_node=16, seq_len=32)
+        b = svc.open_session("b", seed=9, batch_per_node=16, seq_len=32)
+        gen_a = a.epoch(0)
+        ids_a0 = [next(gen_a)["returned"] for _ in range(4)]  # a is mid-epoch 0
+        ids_b1 = [batch["returned"] for batch in b.epoch(1)]  # b runs epoch 1
+        ids_a0 += [batch["returned"] for batch in gen_a]      # a finishes 0
+        before = a.stats.physical_reads
+        ids_a1 = [batch["returned"] for batch in a.epoch(1)]  # a catches up
+        for ids in (ids_a0, ids_b1, ids_a1):
+            assert sorted(np.concatenate(ids).tolist()) == list(range(NUM_DOCS))
+        # a's epoch 1 was fully served from bytes pinned by its own planned
+        # claims since b's epoch-1 plan ran — zero new physical reads
+        assert a.stats.physical_reads == before
+        svc.residency.end_epoch()
+        assert not svc.residency.has_claims()
+        assert svc.residency.cache_bytes == 0
+
+    def test_plan_ahead_epochs_keep_cross_epoch_sharing(self, tmp_path):
+        """Epochs planned ahead of consumption keep their claim pools:
+        starting epoch 0 must not unwind the (job, epoch 1) refs, so epoch
+        1 is served entirely from bytes epoch 0 already read."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        s = svc.open_session("a", seed=2, batch_per_node=16, seq_len=32)
+        svc.plan_epoch(0)
+        svc.plan_epoch(1)
+        for _ in s.epoch(0):
+            pass
+        before = s.stats.physical_reads
+        for _ in s.epoch(1):
+            pass
+        assert s.stats.physical_reads == before  # epoch 1 fully shared
+        svc.residency.end_epoch()
+        assert not svc.residency.has_claims()
+        assert svc.residency.cache_bytes == 0
+
+    def test_duplicate_job_id_rejected_until_closed(self, tmp_path):
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        svc.open_session("a", batch_per_node=16, seq_len=32)
+        with pytest.raises(ValueError, match="already has an open session"):
+            svc.open_session("a", batch_per_node=16, seq_len=32)
+        # a restarted job reopens under the same id with fresh state
+        svc.close_session("a")
+        again = svc.open_session("a", seed=5, batch_per_node=16, seq_len=32)
+        n = sum(1 for _ in again.epoch(0))
+        assert n == again.steps_per_epoch()
+
+
+class TestServiceFaultTolerance:
+    def test_kill_job_mid_epoch_survivors_byte_identical(self, tmp_path):
+        """FailureInjector kills one job mid-epoch through the live pump;
+        the survivors' streams must equal their solo runs, and the victim's
+        outstanding claims must not pin the shared cache."""
+        solo = {}
+        for j in range(3):
+            store = build_store(tmp_path, f"solo{j}")
+            _, _, batches, _ = plain_run(
+                store, seed=100 + 7 * j, sampler_seed=100 + 7 * j + 1, engine="step"
+            )
+            solo[f"j{j}"] = [b["returned"] for b in batches]
+
+        store = build_store(tmp_path, "svc")
+        svc = DataService(store)
+        for j in range(3):
+            svc.open_session(
+                f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32,
+                engine="step",
+            )
+        injector = FailureInjector({4: 1})  # job j1 dies at its step-4 batch
+        monitor = StragglerMonitor(num_workers=3, threshold=2.0)
+        got = {f"j{j}": [] for j in range(3)}
+        for job_id, batch in svc.co_epoch(0):
+            got[job_id].append(batch["returned"])
+            monitor.record(int(job_id[1:]), 0.050 if job_id == "j2" else 0.001)
+            dead = injector.maybe_fail(batch["step"])
+            if dead is not None and job_id == f"j{dead}":
+                svc.close_session(job_id)
+        assert len(got["j1"]) == 5  # steps 0..4, then killed
+        for job_id in ("j0", "j2"):
+            assert len(got[job_id]) == len(solo[job_id])
+            for a, b in zip(solo[job_id], got[job_id]):
+                np.testing.assert_array_equal(a, b)
+        # the per-job step timings fed through the pump flag the slow job
+        assert monitor.stragglers() == [2]
+        # dead session's claims were unwound: nothing left pinned
+        assert svc.residency.cache_bytes == 0
+        assert len(svc.sessions) == 2
+
+    def test_kill_planned_job_unwinds_claims(self, tmp_path):
+        """Replay engine: the victim's *planned* claim refcounts are dropped,
+        so retained chunks do not leak after the epoch."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        for j in range(2):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16, seq_len=32)
+        seen = 0
+        for job_id, batch in svc.co_epoch(0):
+            seen += 1
+            if job_id == "j1" and batch["step"] == 2:
+                svc.close_session("j1")
+        assert seen > 0
+        assert svc.residency.cache_bytes == 0
