@@ -15,6 +15,7 @@ overlap trick; `wait()` joins before the next save or at shutdown.
 from __future__ import annotations
 
 import json
+import shutil
 import threading
 import time
 from pathlib import Path
@@ -41,19 +42,25 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, state) -> Path:
     path = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f".tmp_step_{step:08d}"
     tmp.mkdir(parents=True, exist_ok=True)
-    arrays = _flatten_with_paths(state)
-    np.savez(tmp / "state.npz", **arrays)
-    manifest = {
-        "step": int(step),
-        "time": time.time(),
-        "num_leaves": len(arrays),
-        "keys": sorted(arrays),
-    }
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    # atomic publish: a checkpoint is visible only when complete
-    if path.exists():
-        raise FileExistsError(path)
-    tmp.rename(path)
+    try:
+        arrays = _flatten_with_paths(state)
+        np.savez(tmp / "state.npz", **arrays)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "num_leaves": len(arrays),
+            "keys": sorted(arrays),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # atomic publish: a checkpoint is visible only when complete
+        if path.exists():
+            raise FileExistsError(path)
+        tmp.rename(path)
+    except BaseException:
+        # An abandoned save must not leave a half-written .tmp_step_* behind
+        # (latest_step ignores them, but gc would trip over the stray files).
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return path
 
 

@@ -4,6 +4,7 @@ from .abstract_memory import AbstractMemory
 from .baselines import CoorDLLoader, NoIOLoader, PyTorchStyleLoader, run_baseline_epoch
 from .chunking import ChunkingPlan
 from .distributed import Cluster, EpochResult, RemoteMemory
+from .elastic import ClusterSnapshot
 from .loader import RedoxLoader
 from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
@@ -27,6 +28,7 @@ __all__ = [
     "ChunkingPlan",
     "ChunkStore",
     "Cluster",
+    "ClusterSnapshot",
     "CoorDLLoader",
     "EpochPlan",
     "EpochPlanner",

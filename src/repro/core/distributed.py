@@ -29,7 +29,6 @@ preserved.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 
 import numpy as np
@@ -203,6 +202,17 @@ class Cluster:
         self._owner_of_seq: list[np.ndarray] | None = None
         self._lockeys: list[np.ndarray] | None = None
         self.failed = np.zeros(num_nodes, dtype=bool)
+        # Per-node access cursor: how many positions of ``sequences[r]`` have
+        # been served. The epoch drivers step nodes by ``batch_per_node`` from
+        # these cursors (identical to the old fixed step*batch grid for a
+        # static cluster) — which is what lets a node join mid-epoch at
+        # cursor 0 and a resumed epoch continue from a snapshot's cursors.
+        self.positions = np.zeros(num_nodes, dtype=np.int64)
+        # Driver bookkeeping consumed by Cluster.snapshot(): the epoch being
+        # executed, the next step index, and the step grid in force.
+        self.epoch: "int | None" = None
+        self.current_step = 0
+        self._grid: "tuple[int | None, str | None]" = (None, None)
         self._recorder = None
         # Engine flag: the batched ("step") engine uses the vectorised
         # check-list helpers; the reference per-access engine keeps the
@@ -263,6 +273,9 @@ class Cluster:
         for row in self.pending:
             for mask in row:
                 mask[:] = False
+        self.positions[:] = 0
+        self.epoch = epoch
+        self.current_step = 0
         self.sequences = sampler.node_sequences(epoch)
         self._index_sequences()
         return self.sequences
@@ -302,6 +315,7 @@ class Cluster:
         g = plan.group_of_file(file_id)
         o = int(self.owner_of_group[g])
         stats_r = self.nodes[r].stats
+        self.positions[r] = pos + 1
 
         if o == r:
             res = self.nodes[r].request(file_id)
@@ -339,6 +353,12 @@ class Cluster:
         implementations: the reference walks entries in Python (the
         original per-access protocol); the batched engine resolves every
         entry with one vectorised searchsorted over ``_lockeys``.
+
+        Elastic events keep entries valid without special cases here:
+        ``fail_node``/``join_node`` only ever migrate entries between
+        *owners* (requester positions — and therefore ``sent`` — are
+        untouched), and an entry whose consuming access is donated to a
+        joining node is released outright (see _release_moved_prefetches).
         """
         mask = self.pending[o][r]
         entries = np.nonzero(mask)[0]
@@ -512,6 +532,7 @@ class Cluster:
         node = self.nodes[r]
         if (owners == r).all():
             # Whole slice is owner-local (always true for 1-node clusters).
+            self.positions[r] = hi
             io = io_by_node.setdefault(r, StepIO())
             return node.request_step(fids, io, payloads=payloads, locs=locs)
         rm = self.remote_mem[r]
@@ -570,23 +591,28 @@ class Cluster:
             if payloads is not None:
                 payloads.append(data)
             i += 1
+        self.positions[r] = hi
         return out
 
     # -------------------------------------------------------------- drivers
-    def _step_bounds(self, r: int, step: int, batch_per_node: int) -> tuple[int, int]:
-        size = self.sequences[r].size
-        return min(step * batch_per_node, size), min((step + 1) * batch_per_node, size)
+    def _step_bounds(self, r: int, batch_per_node: int) -> tuple[int, int]:
+        """Node ``r``'s next step slice: ``batch_per_node`` accesses from its
+        cursor. For a static cluster this is exactly the old fixed
+        ``[step*b, (step+1)*b)`` grid; cursors are what let a freshly joined
+        node start at 0 mid-epoch and a restored cluster resume mid-grid."""
+        lo = int(self.positions[r])
+        return lo, min(lo + batch_per_node, int(self.sequences[r].size))
 
-    def _live_steps(self, batch_per_node: int) -> int:
-        return max(
-            math.ceil(self.sequences[r].size / batch_per_node)
+    def _live_exhausted(self) -> bool:
+        return all(
+            self.positions[r] >= self.sequences[r].size
             for r in range(self.num_nodes)
             if not self.failed[r]
         )
 
     def epoch_stream(
         self,
-        sampler: EpochSampler,
+        sampler: "EpochSampler | None",
         epoch: int,
         batch_per_node: int,
         *,
@@ -595,6 +621,9 @@ class Cluster:
         collect_payloads: bool = False,
         recorder=None,
         failures: "dict[int, int] | None" = None,
+        joins: "dict[int, int] | None" = None,
+        start_step: int = 0,
+        resume: bool = False,
     ):
         """THE epoch driver: every live epoch walk goes through here.
 
@@ -610,43 +639,62 @@ class Cluster:
 
         ``engine`` selects the batched id-space walk (``"step"``) or the
         reference per-access walk (``"per_access"``) — kept for planner
-        equivalence tests and as the benchmark baseline. ``failures``
-        optionally maps a step index to a node id to kill at that step's
-        barrier (elastic-remap planning and tests).
+        equivalence tests and as the benchmark baseline.
+
+        Elastic events, both applied at step barriers and in this order:
+        ``failures`` maps a step index to a node id to kill
+        (:meth:`fail_node`); ``joins`` maps a step index to a count of fresh
+        nodes to admit (:meth:`join_node`). Step keys are absolute, so the
+        same schedules drive a resumed suffix unchanged.
+
+        Resume (DESIGN.md §10): with ``resume=True`` the cluster's mid-epoch
+        state — installed by :meth:`Cluster.restore` — is used as-is (no
+        ``begin_epoch``; ``sampler`` may be None) and the walk continues
+        from ``start_step``. The recorder, when given, sees steps relative
+        to the stream's own start (a resumed recorder builds a *suffix*
+        plan); the yielded step indices stay absolute.
         """
         assert stepping in ("ceil", "floor_tail")
         assert engine in ("step", "per_access")
-        self.begin_epoch(sampler, epoch)
+        if resume:
+            assert self.sequences is not None, "resume without restored state"
+        else:
+            assert start_step == 0
+            self.begin_epoch(sampler, epoch)
+        self._grid = (batch_per_node, stepping)
+        self.current_step = start_step
         self._vectorized = engine == "step"
         if recorder is not None:
             self.set_recorder(recorder)
         try:
             if stepping == "floor_tail":
-                assert not failures, "failure schedules require ceil stepping"
+                assert not failures and not joins, (
+                    "elastic-event schedules require ceil stepping"
+                )
                 num_steps = min(s.size for s in self.sequences) // batch_per_node
-            step = 0
+            step = start_step
             while True:
                 if stepping == "ceil":
                     if failures and step in failures:
                         dead = failures[step]
-                        self.fail_node(
-                            dead,
-                            min(step * batch_per_node, self.sequences[dead].size),
-                        )
-                    if step >= self._live_steps(batch_per_node):
+                        self.fail_node(dead, int(self.positions[dead]))
+                    if joins and step in joins:
+                        for _ in range(joins[step]):
+                            self.join_node()
+                    if self._live_exhausted():
                         break
                 elif step >= num_steps:
                     break
                 io_by_node: dict[int, StepIO] = {}
                 if recorder is not None:
-                    recorder.begin_step(step)
+                    recorder.begin_step(step - start_step)
                 returned: list[np.ndarray] = []
                 payloads: "list | None" = [] if collect_payloads else None
                 for r in range(self.num_nodes):
                     if self.failed[r]:
                         returned.append(np.empty(0, dtype=np.int64))
                         continue
-                    lo, hi = self._step_bounds(r, step, batch_per_node)
+                    lo, hi = self._step_bounds(r, batch_per_node)
                     if engine == "step":
                         ret = self.access_step(r, lo, hi, io_by_node, payloads=payloads)
                     else:
@@ -660,24 +708,25 @@ class Cluster:
                                 payloads.append(data)
                     returned.append(ret)
                 if recorder is not None:
-                    recorder.end_step(step, returned, io_by_node)
+                    recorder.end_step(step - start_step, returned, io_by_node)
+                self.current_step = step + 1
                 yield step, returned, payloads, io_by_node
                 step += 1
             if stepping == "floor_tail":
                 # Drain the ragged tail so exactly-once epoch invariants hold.
                 io_by_node = {}
                 if recorder is not None:
-                    recorder.begin_step(num_steps)
+                    recorder.begin_step(num_steps - start_step)
                 tail: list[np.ndarray] = []
                 for r in range(self.num_nodes):
-                    lo = num_steps * batch_per_node
+                    lo = int(self.positions[r])
                     # payloads popped but not collected: tail records are
                     # consumed for the invariants, never trained on
                     tail.append(
                         self.access_step(r, lo, self.sequences[r].size, io_by_node)
                     )
                 if recorder is not None:
-                    recorder.end_step(num_steps, tail, io_by_node)
+                    recorder.end_step(num_steps - start_step, tail, io_by_node)
             self._check_epoch_complete()
         finally:
             self._vectorized = True
@@ -695,6 +744,7 @@ class Cluster:
         plan=None,
         recorder=None,
         failures: "dict[int, int] | None" = None,
+        joins: "dict[int, int] | None" = None,
     ) -> EpochResult:
         """Execute a full epoch with per-step node interleaving (DP barrier).
 
@@ -702,8 +752,10 @@ class Cluster:
         *replayed* from the pre-computed schedule instead of executed live —
         no protocol decisions, no RNG, just the recorded event stream.
         """
+        empty = np.empty(0, dtype=np.int64)
         per_node_step_io: list[list[StepIO]] = [[] for _ in range(self.num_nodes)]
         returned: list[list[np.ndarray]] = [[] for _ in range(self.num_nodes)]
+        steps_seen = 0
         if plan is not None:
             stream = self.replay_stream(
                 plan, epoch=epoch, batch_per_node=batch_per_node, stepping="ceil"
@@ -711,18 +763,26 @@ class Cluster:
         else:
             stream = self.epoch_stream(
                 sampler, epoch, batch_per_node,
-                engine=engine, recorder=recorder, failures=failures,
+                engine=engine, recorder=recorder, failures=failures, joins=joins,
             )
         for _, step_returned, _, io_by_node in stream:
+            while len(per_node_step_io) < self.num_nodes:
+                # A node joined mid-epoch: backfill its pre-join steps so the
+                # StepIO/returned grids stay rectangular (and identical to a
+                # replayed plan's padded grid).
+                per_node_step_io.append([StepIO() for _ in range(steps_seen)])
+                returned.append([empty] * steps_seen)
             for r in range(self.num_nodes):
                 per_node_step_io[r].append(io_by_node.get(r, StepIO()))
                 if collect_returned:
-                    returned[r].append(step_returned[r])
+                    returned[r].append(
+                        step_returned[r] if r < len(step_returned) else empty
+                    )
+            steps_seen += 1
         node_stats = [n.stats for n in self.nodes]
         agg = node_stats[0]
         for s in node_stats[1:]:
             agg = agg.merge(s)
-        empty = np.empty(0, dtype=np.int64)
         return EpochResult(
             stats=agg,
             node_stats=node_stats,
@@ -756,6 +816,11 @@ class Cluster:
         store = self.store
         if collect_payloads is None:
             collect_payloads = store is not None
+        if plan.joined_nodes and self.num_nodes == plan.num_nodes - plan.joined_nodes:
+            # The plan admitted nodes mid-epoch; replay needs matching shells
+            # (no protocol state — the recorded events carry everything).
+            while self.num_nodes < plan.num_nodes:
+                self._append_node()
         plan.validate(self, epoch, batch_per_node, stepping)
         for r, st in enumerate(plan.node_stats):
             self.nodes[r].stats = st.copy()
@@ -767,6 +832,15 @@ class Cluster:
         # modelling here — the byte movement they represent is priced by the
         # plan's StepIO net counters, not re-enacted.
         pool: dict[int, bytes] = {}
+        if plan.start_step and store is not None:
+            # Resumed suffix: files already resident/prefetched at the
+            # snapshot have no load event in the suffix plan — their bytes
+            # were rehydrated into the restored cluster by Cluster.restore.
+            for node in self.nodes:
+                pool.update(node.buffer)
+            for rm in self.remote_mem:
+                for loc, data in rm._payloads.items():
+                    pool[int(rm._loc_file[loc])] = data
         for step in range(plan.num_steps + (1 if plan.has_tail else 0)):
             io_by_node = plan.step_io(step)
             if store is not None:
@@ -796,7 +870,9 @@ class Cluster:
                 payloads = [
                     pool.pop(int(f)) for ret in returned for f in ret.tolist()
                 ]
-            yield step, returned, payloads, io_by_node
+            # Suffix plans (EpochPlanner.plan_from) are step-indexed from
+            # their resume point; yield absolute step numbers either way.
+            yield plan.start_step + step, returned, payloads, io_by_node
         assert not pool, "replay left undelivered payloads behind"
 
     def _check_epoch_complete(self) -> None:
@@ -836,6 +912,7 @@ class Cluster:
         assert self.sequences is not None, "fail_node outside an epoch"
         tail = self.sequences[dead][processed_upto:]
         self.sequences[dead] = self.sequences[dead][:processed_upto]
+        self.positions[dead] = processed_upto
         self.remap_ownership(dead)
         survivors = [r for r in range(self.num_nodes) if not self.failed[r]]
         shares = [tail[i :: len(survivors)] for i in range(len(survivors))]
@@ -921,3 +998,188 @@ class Cluster:
                 if data is not None:
                     self.nodes[r].buffer[f] = data
                 self.pending[r][r][loc] = False
+
+    # --------------------------------------------------------- elastic join
+    def _append_node(self) -> int:
+        """Structural growth: append a fresh node shell (LocalNode, remote
+        memory, check-list row + column, cursor). Shared by
+        :meth:`join_node` (which rebalances state onto the shell) and by
+        replay of plans containing joins (replay never runs the protocol,
+        so the shell needs no protocol state)."""
+        new = self.num_nodes
+        self.num_nodes = new + 1
+        node = LocalNode(
+            self.plan,
+            policy=self.policy,
+            seed=(self.seed, 7, new),
+            store=self.store,
+            node_id=new,
+        )
+        node.recorder = self._recorder
+        self.nodes.append(node)
+        self.remote_mem.append(
+            RemoteMemory(self._remote_limit, self.plan.file_sizes, self.plan.num_slots)
+        )
+        m = self.plan.num_slots
+        for row, srow in zip(self.pending, self.pending_sent):
+            row.append(np.zeros(m, dtype=bool))
+            srow.append(np.zeros(m, dtype=np.int64))
+        self.pending.append(
+            [np.zeros(m, dtype=bool) for _ in range(self.num_nodes)]
+        )
+        self.pending_sent.append(
+            [np.zeros(m, dtype=np.int64) for _ in range(self.num_nodes)]
+        )
+        self.failed = np.append(self.failed, False)
+        self.positions = np.append(self.positions, 0)
+        return new
+
+    def join_node(self) -> int:
+        """Admit a fresh node mid-epoch: the elastic dual of :meth:`fail_node`.
+
+        The same position-stability trick applies, mirrored: every existing
+        node keeps a *prefix* of its sequence (all served positions and the
+        outstanding-prefetch bookkeeping keyed by them stay valid) and only
+        donates a suffix of unconsumed tail accesses, which become the new
+        node's sequence. Ownership rebalances by moving whole chunk groups
+        — their abstract-memory residents (and payload bytes) and their
+        check-list entries migrate with the group (owner-side moves only:
+        requester positions and ``pending_sent`` stay untouched), so
+        exactly-once is preserved without touching disk. A donated access
+        whose prefetched file sits in the donor's remote memory is handled
+        like a failed node's remote memory (DESIGN.md §5/§10): the sender
+        un-consumes it and the file re-enters through a normal refill.
+
+        Deterministic given (cluster state, epoch): the planner's shadow
+        walk of a ``joins`` schedule reproduces the live decisions exactly.
+        """
+        assert self.sequences is not None, "join_node outside an epoch"
+        prev_live = [r for r in range(self.num_nodes) if not self.failed[r]]
+        new = self._append_node()
+        node = self.nodes[new]
+        if self.epoch is not None:
+            # Same per-epoch RNG derivation as LocalNode.begin_epoch: the
+            # joined node's refill stream is a pure function of
+            # (seed, node_id, epoch), independent of join time.
+            seed = node.seed if isinstance(node.seed, tuple) else (node.seed,)
+            node.rng = np.random.default_rng((*seed, self.epoch))
+        # 1. Journal replication: the union of the live nodes' journals is
+        #    exactly the set of files truly consumed so far (see
+        #    remap_ownership step 3 — merges keep every live copy accurate).
+        for r in prev_live:
+            node.consumed |= self.nodes[r].consumed
+        live = prev_live + [new]
+        # 2. Ownership rebalance: move whole groups from the largest owners
+        #    until the new node holds a fair share.
+        counts = {r: int((self.owner_of_group == r).sum()) for r in prev_live}
+        target = self.plan.num_groups // len(live)
+        moved = 0
+        while moved < target:
+            donor = max(prev_live, key=lambda r: (counts[r], -r))
+            if counts[donor] <= 1:
+                break  # never strip an owner bare
+            g = int(np.nonzero(self.owner_of_group == donor)[0][-1])
+            self._move_group(g, donor, new)
+            counts[donor] -= 1
+            moved += 1
+        # 3. Sequence rebalance: each live node donates the last
+        #    ``remaining // len(live)`` of its unconsumed tail.
+        tails: list[np.ndarray] = []
+        for r in prev_live:
+            size = int(self.sequences[r].size)
+            pos = int(self.positions[r])
+            move = (size - pos) // len(live)
+            if move <= 0:
+                continue
+            cut = size - move
+            self._release_moved_prefetches(r, pos, cut)
+            tails.append(self.sequences[r][cut:])
+            self.sequences[r] = self.sequences[r][:cut]
+        self.sequences.append(
+            np.concatenate(tails) if tails else np.empty(0, dtype=np.int64)
+        )
+        self._index_sequences()
+        return new
+
+    def _move_group(self, g: int, old: int, new: int) -> None:
+        """Move chunk-group ``g`` (ownership, residents + payloads, and the
+        outstanding check-list entries for its locations) between nodes."""
+        c = self.plan.chunk_size
+        self.owner_of_group[g] = new
+        old_node, new_node = self.nodes[old], self.nodes[new]
+        slots = np.nonzero(old_node.memory.resident[g] >= 0)[0]
+        if slots.size:
+            files = old_node.memory.resident[g][slots].copy()
+            old_node.memory.take_many(np.full(slots.size, g, dtype=np.int64), slots)
+            new_node.memory.fill_many(g, slots, files)
+            if old_node.store is not None:
+                for f in files.tolist():
+                    new_node.buffer[f] = old_node.buffer.pop(f)
+        lo, hi = g * c, (g + 1) * c
+        for r in range(self.num_nodes):
+            mask = self.pending[old][r][lo:hi]
+            if mask.any():
+                idx = np.nonzero(mask)[0] + lo
+                self.pending[new][r][idx] = True
+                self.pending_sent[new][r][idx] = self.pending_sent[old][r][idx]
+                self.pending[old][r][lo:hi] = False
+
+    def _release_moved_prefetches(self, r: int, pos: int, cut: int) -> None:
+        """Node ``r`` donates sequence positions ``[cut, end)``. Any file in
+        its remote memory whose consuming access (the next access of its
+        location) falls in the donated suffix is released: the sender
+        un-consumes it everywhere (requesters journal remote consumptions
+        durably, exactly like the fail_node recovery path) and its
+        check-list entry is dropped, so the file re-enters via a refill and
+        is eventually consumed at the donated access's new home."""
+        rm_r = self.remote_mem[r]
+        held = rm_r.locations()
+        if held.size == 0:
+            return
+        kept_window = self._loc_of_seq[r][pos:cut]
+        live = [x for x in range(self.num_nodes) if not self.failed[x]]
+        for loc in held.tolist():
+            if (kept_window == loc).any():
+                continue  # still consumed by one of r's kept positions
+            f, _ = rm_r.take(loc)
+            for o in range(self.num_nodes):
+                self.pending[o][r][loc] = False
+            for r2 in live:
+                self.nodes[r2].consumed[f] = False
+
+    # ----------------------------------------------------- snapshot/restore
+    def snapshot(self, *, step: "int | None" = None):
+        """Capture the full mid-epoch protocol state (see core/elastic.py).
+
+        ``step`` overrides the driver-maintained next-step index (manual
+        access-level drivers pass their own grid position)."""
+        from .elastic import ClusterSnapshot
+
+        return ClusterSnapshot.capture(self, step=step)
+
+    @staticmethod
+    def restore(snap, *, plan: "ChunkingPlan | None" = None, store=None) -> "Cluster":
+        """Rebuild a mid-epoch cluster — in a fresh process — from a
+        :class:`repro.core.elastic.ClusterSnapshot`.
+
+        The plan comes from ``store`` when one is attached (real-bytes
+        resume; payloads of resident/prefetched files are re-read from it),
+        else must be passed explicitly (id-space resume)."""
+        if plan is None:
+            if store is None:
+                raise ValueError("restore() needs a ChunkingPlan or a ChunkStore")
+            plan = store.plan
+        snap.check_plan(plan)
+        cfg = snap.config
+        cluster = Cluster(
+            plan,
+            int(cfg["num_nodes"]),
+            remote_memory_limit_bytes=int(cfg["remote_memory_limit_bytes"]),
+            prefetch_window=int(cfg["prefetch_window"]),
+            policy=cfg["policy"],
+            prefetch=bool(cfg["prefetch"]),
+            seed=cfg["seed"],
+            store=store,
+        )
+        snap.install(cluster)
+        return cluster

@@ -30,18 +30,23 @@ latency.
 
 from __future__ import annotations
 
+import json
 import queue
 import threading
+from pathlib import Path
 
 import numpy as np
 
 from ..data.tokens import decode_record
 from .distributed import Cluster
+from .elastic import ClusterSnapshot
 from .planner import EpochPlanner
 from .sampler import EpochSampler
 from .stats import StepIO
 
 __all__ = ["RedoxLoader", "GlobalBatch"]
+
+LOADER_MANIFEST = "loader_manifest.json"
 
 
 class GlobalBatch(dict):
@@ -91,6 +96,15 @@ class RedoxLoader:
         self.engine = engine
         self.last_plan = None       # EpochPlan of the most recent epoch
         self._worker: threading.Thread | None = None
+        # Suspend/resume bookkeeping (DESIGN.md §10): the consumption cursor
+        # (epoch, next step) advanced as batches are yielded, the underlying
+        # step stream of a running sync epoch (closable by suspend), whether
+        # the current epoch is consumed through epoch_async, and the pending
+        # resume point installed by RedoxLoader.resume().
+        self._progress: "tuple[int, int] | None" = None
+        self._live_stream = None
+        self._async_epoch = False
+        self._resume: "dict | None" = None
 
     @property
     def use_planner(self) -> bool:
@@ -103,8 +117,15 @@ class RedoxLoader:
     # ------------------------------------------------------------- epochs
     def epoch(self, epoch: int, *, plan=None):
         """Yield GlobalBatch objects; runs protocol inline (deterministic)."""
-        for item in self._produce(epoch, plan=plan):
-            yield self._assemble(*item)
+        self._async_epoch = False
+        produce = self._produce(epoch, plan=plan)
+        self._live_stream = produce
+        for item in produce:
+            batch = self._assemble(*item)
+            # Cursor advances as the batch is handed over: a consumer that
+            # breaks right after this yield suspends at the next step.
+            self._progress = (epoch, int(batch["step"]) + 1)
+            yield batch
 
     def epoch_async(self, epoch: int, *, plan=None):
         """Same batches, two-stage pipeline (double-buffered).
@@ -147,13 +168,16 @@ class RedoxLoader:
 
         t = threading.Thread(target=worker, daemon=True)
         self._worker = t
+        self._async_epoch = True
         t.start()
         try:
             while True:
                 item = q.get()
                 if item is stop:
                     break
-                yield self._assemble(*item)
+                batch = self._assemble(*item)
+                self._progress = (epoch, int(batch["step"]) + 1)
+                yield batch
         finally:
             abandoned.set()
             while True:  # drain so a blocked put() observes the signal fast
@@ -208,11 +232,30 @@ class RedoxLoader:
         assert cluster.store is not None, (
             "RedoxLoader requires a Cluster built with a ChunkStore"
         )
+        resume = self._resume
+        if resume is not None and resume["epoch"] != epoch:
+            # The restored cluster holds mid-epoch state for the suspended
+            # epoch; walking any other epoch over it would trip the
+            # begin_epoch drain assertions with a misleading message — and
+            # silently dropping the saved suffix would violate exactly-once.
+            raise RuntimeError(
+                f"loader was resumed mid-epoch {resume['epoch']} (next step "
+                f"{resume['start_step']}); consume that epoch to completion "
+                f"before asking for epoch {epoch}"
+            )
+        self._progress = (epoch, resume["start_step"] if resume else 0)
         if self.engine == "replay":
             if plan is None:
-                plan = EpochPlanner(cluster).plan(
-                    self.sampler, epoch, self.batch_per_node, stepping="floor_tail"
-                )
+                if resume is not None:
+                    # Re-plan only the epoch *suffix* from the snapshot; the
+                    # backend's readahead schedule is exactly the remaining
+                    # chunk reads.
+                    plan = EpochPlanner(cluster).plan_from(resume["snapshot"])
+                else:
+                    plan = EpochPlanner(cluster).plan(
+                        self.sampler, epoch, self.batch_per_node,
+                        stepping="floor_tail",
+                    )
             self.last_plan = plan
             # Per-plan hit attribution is a delta over the (possibly shared)
             # backend's counters — exact for a lone loader, approximate when
@@ -226,12 +269,129 @@ class RedoxLoader:
         else:
             plan, before = None, None
             stream = cluster.epoch_stream(
-                self.sampler, epoch, self.batch_per_node,
+                self.sampler if resume is None else None,
+                epoch, self.batch_per_node,
                 stepping="floor_tail", engine=self.engine, collect_payloads=True,
+                resume=resume is not None,
+                start_step=resume["start_step"] if resume else 0,
             )
         for step, returned, payloads, io_by_node in stream:
             yield payloads, step, io_by_node, returned
+        if self._resume is resume:
+            self._resume = None  # the resumed epoch completed
         if plan is not None:
             b = cluster.backend_stats
             plan.stats.scheduled_read_hits = b.scheduled_hits - before[0]
             plan.stats.heuristic_prefetch_hits = b.prefetch_hits - before[1]
+
+    # ------------------------------------------------------ suspend/resume
+    def suspend(self, out_dir: "str | Path", *, at: "tuple[int, int] | None" = None):
+        """Checkpoint the data plane mid-epoch (DESIGN.md §10).
+
+        Writes a :class:`~repro.core.elastic.ClusterSnapshot`
+        (``data_state.npz`` + ``data_manifest.json``) plus a loader manifest
+        under ``out_dir`` — the data-plane sibling of a model checkpoint. A
+        fresh process resumes with :meth:`RedoxLoader.resume` and the batch
+        stream continues byte-identically.
+
+        ``at=(epoch, next_step)`` defaults to the loader's own consumption
+        cursor. For the ``"replay"`` engine the snapshot is *derived* (a
+        store-less shadow walks the epoch prefix in id-space), so training
+        can keep consuming batches while suspend() runs — snapshot-without-
+        stopping, the property the ``--resume-data`` launchers rely on. For
+        the live engines the loader's protocol state IS the stream state:
+        the current sync epoch stream is closed at its step boundary and the
+        live cluster is captured (``epoch_async`` live walks run ahead of
+        consumption and cannot be suspended exactly).
+        """
+        at = at or self._progress or self.resume_point
+        if at is None:
+            raise RuntimeError("suspend() before any epoch was started")
+        epoch, next_step = int(at[0]), int(at[1])
+        if self.engine == "replay":
+            snap = EpochPlanner(self.cluster).state_at(
+                self.sampler, epoch, self.batch_per_node, next_step,
+                stepping="floor_tail",
+            )
+        else:
+            if self._async_epoch:
+                raise RuntimeError(
+                    "live-engine epoch_async streams prefetch ahead of "
+                    "consumption and cannot be suspended exactly; use the "
+                    "replay engine (default) or the synchronous epoch()"
+                )
+            if (self._progress or self.resume_point) != (epoch, next_step):
+                raise RuntimeError(
+                    "a live engine can only suspend at its own cursor "
+                    f"{self._progress or self.resume_point}, not {at!r}"
+                )
+            if self._live_stream is not None:
+                self._live_stream.close()
+                self._live_stream = None
+            if self.cluster.sequences is None or self.cluster.epoch != epoch:
+                # The epoch was never entered (e.g. a pump suspended before
+                # reaching this session): materialise its step-0 state.
+                assert next_step == 0, "mid-epoch cursor but no epoch state"
+                self.cluster.begin_epoch(self.sampler, epoch)
+                self.cluster._grid = (self.batch_per_node, "floor_tail")
+            snap = self.cluster.snapshot(step=next_step)
+        out_dir = Path(out_dir)
+        snap.save(out_dir)
+        (out_dir / LOADER_MANIFEST).write_text(json.dumps(dict(
+            engine=self.engine,
+            batch_per_node=self.batch_per_node,
+            seq_len=self.seq_len,
+            pad_id=self.pad_id,
+            queue_depth=self.queue_depth,
+            epoch=epoch,
+            next_step=next_step,
+            sampler=dict(
+                num_files=self.sampler.num_files,
+                num_nodes=self.sampler.num_nodes,
+                seed=self.sampler.seed,
+            ),
+        )))
+        return out_dir
+
+    @classmethod
+    def resume(cls, in_dir: "str | Path", store, **overrides) -> "RedoxLoader":
+        """Rebuild a suspended loader from :meth:`suspend` files — typically
+        in a fresh process holding only the (re-opened) ChunkStore.
+
+        The next ``loader.epoch(epoch)`` / ``epoch_async(epoch)`` call for
+        the suspended epoch continues from the saved step: the replay engine
+        re-plans just the suffix (``EpochPlanner.plan_from``) and hands the
+        remaining chunk schedule to the backend; live engines walk on from
+        the restored protocol state. ``overrides`` replace loader-only knobs
+        (``queue_depth``, ``seq_len``, ...), never protocol state.
+        """
+        in_dir = Path(in_dir)
+        mf = json.loads((in_dir / LOADER_MANIFEST).read_text())
+        snap = ClusterSnapshot.load(in_dir)
+        cluster = Cluster.restore(snap, store=store)
+        smp = mf["sampler"]
+        sampler = EpochSampler(
+            int(smp["num_files"]), int(smp["num_nodes"]), seed=smp["seed"]
+        )
+        kwargs = dict(
+            batch_per_node=int(mf["batch_per_node"]),
+            seq_len=int(mf["seq_len"]),
+            pad_id=int(mf["pad_id"]),
+            queue_depth=int(mf["queue_depth"]),
+            engine=mf["engine"],
+        )
+        kwargs.update(overrides)
+        loader = cls(cluster, sampler, **kwargs)
+        loader._resume = {
+            "epoch": int(mf["epoch"]),
+            "start_step": int(mf["next_step"]),
+            "snapshot": snap,
+        }
+        return loader
+
+    @property
+    def resume_point(self) -> "tuple[int, int] | None":
+        """(epoch, next_step) a resumed loader will continue from, if any."""
+        if self._resume is None:
+            return None
+        return self._resume["epoch"], self._resume["start_step"]

@@ -137,6 +137,12 @@ class EpochPlan:
     io_nodes_present: np.ndarray  # bool grid: live walk created an entry
 
     node_stats: list[NodeStats]   # exact end-of-epoch protocol counters
+    # Elastic extensions: a *suffix* plan (EpochPlanner.plan_from) covers the
+    # epoch from ``start_step`` on (its arrays are indexed relative to that);
+    # ``joined_nodes`` counts nodes admitted mid-epoch by a ``joins``
+    # schedule, so replay can grow matching shells.
+    start_step: int = 0
+    joined_nodes: int = 0
     stats: PlannerStats = dataclasses.field(default_factory=PlannerStats)
 
     # ------------------------------------------------------------ accessors
@@ -192,18 +198,23 @@ class EpochPlan:
         stepping: str,
         num_steps: int,
         node_stats: "list[NodeStats]",
+        start_step: int = 0,
+        joined_nodes: int = 0,
     ) -> "EpochPlan":
         """Assemble a plan from a recorded epoch walk.
 
         Shared by :class:`EpochPlanner` (solo shadow walk) and the data
         service's joint planner (``repro/service``), which interleaves many
-        shadow clusters and therefore drives the streams itself.
+        shadow clusters and therefore drives the streams itself. A node
+        joined mid-walk has no entries in the pre-join steps; its rows are
+        padded with empty returns there (matching the live driver's grid).
         """
         has_tail = len(rec.returned) > num_steps
+        none = np.empty(0, dtype=np.int64)
 
         returned_flat, returned_offsets = [], []
         for r in range(num_nodes):
-            per_step = [s[r] for s in rec.returned]
+            per_step = [s[r] if r < len(s) else none for s in rec.returned]
             offs = np.zeros(len(per_step) + 1, dtype=np.int64)
             np.cumsum([p.size for p in per_step], out=offs[1:])
             returned_flat.append(
@@ -250,6 +261,8 @@ class EpochPlan:
             io_grid=io_grid,
             io_nodes_present=io_present,
             node_stats=[s.copy() for s in node_stats],
+            start_step=start_step,
+            joined_nodes=joined_nodes,
         )
         plan.stats = PlannerStats(
             planned_steps=num_steps,
@@ -305,14 +318,16 @@ class EpochPlanner:
         *,
         stepping: str = "ceil",
         failures: "dict[int, int] | None" = None,
+        joins: "dict[int, int] | None" = None,
     ) -> EpochPlan:
         t0 = time.perf_counter()
         shadow = self.cluster.planning_clone()
+        initial_nodes = shadow.num_nodes
         rec = PlanRecorder()
         steps = 0
         for step, _, _, _ in shadow.epoch_stream(
             sampler, epoch, batch_per_node,
-            stepping=stepping, recorder=rec, failures=failures,
+            stepping=stepping, recorder=rec, failures=failures, joins=joins,
         ):
             steps = step + 1
         plan = EpochPlan.from_recorder(
@@ -323,6 +338,84 @@ class EpochPlanner:
             stepping=stepping,
             num_steps=steps,
             node_stats=[n.stats for n in shadow.nodes],
+            joined_nodes=shadow.num_nodes - initial_nodes,
         )
         plan.stats.plan_time_s = time.perf_counter() - t0
         return plan
+
+    def plan_from(
+        self,
+        snapshot,
+        *,
+        failures: "dict[int, int] | None" = None,
+        joins: "dict[int, int] | None" = None,
+    ) -> EpochPlan:
+        """Re-plan the epoch *suffix* from a mid-epoch snapshot.
+
+        A store-less shadow is restored from the snapshot and walked to the
+        end of the epoch; the recorded events become a suffix
+        :class:`EpochPlan` (``start_step = snapshot.step``, arrays indexed
+        relative to it) that ``replay_stream`` executes — handing the
+        backend exactly the *remaining* chunk-read schedule. Elastic-event
+        schedules are keyed by absolute step, so passing the original
+        ``failures``/``joins`` dicts replays the scenario's suffix events.
+        """
+        t0 = time.perf_counter()
+        shadow = Cluster.restore(snapshot, plan=self.cluster.plan)
+        initial_nodes = shadow.num_nodes
+        batch = snapshot.grid.get("batch_per_node")
+        stepping = snapshot.grid.get("stepping") or "ceil"
+        assert batch is not None, "snapshot carries no step grid to re-plan on"
+        rec = PlanRecorder()
+        steps = 0
+        for step, _, _, _ in shadow.epoch_stream(
+            None, snapshot.epoch, batch,
+            stepping=stepping, recorder=rec, failures=failures, joins=joins,
+            start_step=snapshot.step, resume=True,
+        ):
+            steps = step - snapshot.step + 1
+        plan = EpochPlan.from_recorder(
+            rec,
+            epoch=snapshot.epoch,
+            batch_per_node=batch,
+            num_nodes=shadow.num_nodes,
+            stepping=stepping,
+            num_steps=steps,
+            node_stats=[n.stats for n in shadow.nodes],
+            start_step=snapshot.step,
+            joined_nodes=shadow.num_nodes - initial_nodes,
+        )
+        plan.stats.plan_time_s = time.perf_counter() - t0
+        return plan
+
+    def state_at(
+        self,
+        sampler: EpochSampler,
+        epoch: int,
+        batch_per_node: int,
+        step: int,
+        *,
+        stepping: str = "ceil",
+        failures: "dict[int, int] | None" = None,
+        joins: "dict[int, int] | None" = None,
+    ):
+        """The cluster's exact protocol state at the ``step`` barrier of
+        ``epoch``, as a :class:`~repro.core.elastic.ClusterSnapshot` —
+        computed on a store-less shadow (the live cluster is untouched).
+
+        This is how a *replay* session suspends: its protocol state is
+        implicit in the plan, so the snapshot is derived by simulating the
+        prefix in id-space (per-epoch RNG derivation makes the shadow walk
+        bit-identical to the live one)."""
+        shadow = self.cluster.planning_clone()
+        if step == 0:
+            shadow.begin_epoch(sampler, epoch)
+            shadow._grid = (batch_per_node, stepping)
+            return shadow.snapshot(step=0)
+        for s, _, _, _ in shadow.epoch_stream(
+            sampler, epoch, batch_per_node,
+            stepping=stepping, failures=failures, joins=joins,
+        ):
+            if s + 1 >= step:
+                break
+        return shadow.snapshot(step=step)

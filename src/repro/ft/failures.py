@@ -56,11 +56,29 @@ class FailureInjector:
         return self.schedule.get(step)
 
 
+def _median(values: "list[float]") -> float:
+    """True median: mean of the two middles for even-length input."""
+    values = sorted(values)
+    mid = len(values) // 2
+    if len(values) % 2:
+        return values[mid]
+    return 0.5 * (values[mid - 1] + values[mid])
+
+
 class StragglerMonitor:
     """Tracks per-worker step durations; flags workers slower than
     ``threshold`` x the median as stragglers (DESIGN.md §5: the Redox
     loader responds by deepening its prefetch queue for that worker and
-    re-routing remote reads away from it)."""
+    re-routing remote reads away from it).
+
+    The reference for each worker is the *leave-one-out* true median of the
+    other workers' window means, so a straggler's own slowness never
+    inflates its threshold. (The old upper-middle ``med[len(med)//2]``
+    median made a slow worker unflaggable in 2-worker fleets: the reference
+    WAS its own mean.) A worker with an **empty window** while peers have
+    data is flagged explicitly — no step reports is the strongest straggler
+    signal there is.
+    """
 
     def __init__(self, num_workers: int, window: int = 16, threshold: float = 2.0):
         self.window = window
@@ -74,14 +92,17 @@ class StragglerMonitor:
             t.pop(0)
 
     def stragglers(self) -> list[int]:
-        med = sorted(
-            sum(t) / len(t) for t in self._times if t
-        )
-        if not med:
-            return []
-        median = med[len(med) // 2]
+        means = {
+            w: sum(t) / len(t) for w, t in enumerate(self._times) if t
+        }
+        if not means:
+            return []  # no worker has reported yet: no baseline, no flags
         out = []
         for w, t in enumerate(self._times):
-            if t and sum(t) / len(t) > self.threshold * median:
+            if not t:
+                out.append(w)  # peers report, this one is silent
+                continue
+            others = [m for w2, m in means.items() if w2 != w]
+            if others and means[w] > self.threshold * _median(others):
                 out.append(w)
         return out

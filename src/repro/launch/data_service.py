@@ -41,7 +41,20 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--store-dir", type=Path, default=None,
                     help="reuse/build the chunk store here instead of a tmpdir")
+    ap.add_argument("--resume-data", type=Path, default=None, metavar="DIR",
+                    help="service suspend/resume directory: an existing "
+                         "service_manifest.json there is resumed mid-epoch; "
+                         "--suspend-after writes one")
+    ap.add_argument("--suspend-after", type=int, default=None, metavar="N",
+                    help="suspend all sessions to --resume-data after N pump "
+                         "steps and exit (restart with the same flags to "
+                         "continue byte-identically)")
     args = ap.parse_args(argv)
+    if args.suspend_after is not None and args.resume_data is None:
+        ap.error("--suspend-after requires --resume-data DIR")
+    if args.resume_data is not None and args.store_dir is None:
+        ap.error("--resume-data requires --store-dir (the snapshot references "
+                 "the persistent chunk store)")
 
     with contextlib.ExitStack() as stack:
         if args.store_dir is None:
@@ -62,19 +75,47 @@ def main(argv=None) -> int:
             )
         store = ChunkStore.open(root)
         limit = int(args.cache_mb * 1e6) if args.cache_mb else None
-        svc = DataService(store, cache_limit_bytes=limit, co_refill=args.co_refill)
-        for j in range(args.jobs):
-            svc.open_session(
-                f"job{j}", seed=args.seed + 10 * j + 1,
-                batch_per_node=args.batch, seq_len=args.seq_len,
-                engine=args.engine,
+        resuming = (
+            args.resume_data is not None
+            and (args.resume_data / "service_manifest.json").exists()
+        )
+        if resuming:
+            svc = DataService.resume(args.resume_data, store)
+            start_epoch = min(
+                s.loader.resume_point[0] for s in svc.sessions
+                if s.loader.resume_point is not None
             )
-        steps = {f"job{j}": 0 for j in range(args.jobs)}
+            print(f"resumed {len(svc.sessions)} session(s) mid-epoch "
+                  f"{start_epoch} from {args.resume_data}")
+        else:
+            svc = DataService(store, cache_limit_bytes=limit,
+                              co_refill=args.co_refill)
+            for j in range(args.jobs):
+                svc.open_session(
+                    f"job{j}", seed=args.seed + 10 * j + 1,
+                    batch_per_node=args.batch, seq_len=args.seq_len,
+                    engine=args.engine,
+                )
+            start_epoch = 0
+        steps = {s.job_id: 0 for s in svc.sessions}
         demand = 0
+        pumped = 0
+        suspended = False
         t0 = time.perf_counter()
-        for epoch in range(args.epochs):
-            for job_id, _ in svc.co_epoch(epoch):
+        for epoch in range(start_epoch, args.epochs):
+            pump = svc.co_epoch(epoch)
+            for job_id, _ in pump:
                 steps[job_id] += 1
+                pumped += 1
+                if args.suspend_after is not None and pumped >= args.suspend_after:
+                    suspended = True
+                    break
+            if suspended:
+                pump.close()
+                out = svc.suspend(args.resume_data)
+                print(f"suspended after {pumped} pump step(s) -> {out}; "
+                      f"rerun with the same flags to continue")
+                break
             # NodeStats are per-epoch (reset at the next begin_epoch), so
             # fold each epoch's protocol-level demand in as it completes.
             demand += sum(

@@ -40,6 +40,11 @@ def main() -> int:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--full", action="store_true", help="full-size config (real HW)")
+    ap.add_argument("--resume-data", action="store_true",
+                    help="checkpoint/restore the DATA PLANE alongside model "
+                         "state: each model checkpoint also writes a mid-epoch "
+                         "loader snapshot (ckpt/data), and a restart resumes "
+                         "the batch stream byte-identically mid-epoch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -57,12 +62,18 @@ def main() -> int:
                                mean_len=args.seq_len // 2, seed=5)
     store = ds.build_store(workdir / "chunks", chunk_size=16,
                            memory_bytes=int(ds.sizes_bytes.sum() // 4), seed=1)
-    cluster = Cluster(store.plan, args.nodes, store=store, seed=2,
-                      remote_memory_limit_bytes=1_000_000)
-    sampler = EpochSampler(args.num_docs, args.nodes, seed=3)
-    loader = RedoxLoader(cluster, sampler,
-                         batch_per_node=max(args.batch // args.nodes, 1),
-                         seq_len=args.seq_len)
+    data_ck = workdir / "ckpt" / "data"
+    if args.resume_data and (data_ck / "loader_manifest.json").exists():
+        loader = RedoxLoader.resume(data_ck, store)
+        print(f"data plane resumed at epoch {loader.resume_point[0]} "
+              f"step {loader.resume_point[1]}")
+    else:
+        cluster = Cluster(store.plan, args.nodes, store=store, seed=2,
+                          remote_memory_limit_bytes=1_000_000)
+        sampler = EpochSampler(args.num_docs, args.nodes, seed=3)
+        loader = RedoxLoader(cluster, sampler,
+                             batch_per_node=max(args.batch // args.nodes, 1),
+                             seq_len=args.seq_len)
     ckpt = AsyncCheckpointer(workdir / "ckpt")
     start = latest_step(workdir / "ckpt")
     if start:
@@ -74,7 +85,7 @@ def main() -> int:
               "projected through the frontend stub (see launch/specs.py)")
 
     step = int(start or 0)
-    epoch, t0 = 0, time.time()
+    epoch, t0 = (loader.resume_point or (0, 0))[0], time.time()
     while step < args.steps:
         for batch in loader.epoch_async(epoch):
             if step >= args.steps:
@@ -111,6 +122,10 @@ def main() -> int:
                       f"({(time.time()-t0)/step:.2f}s/step)")
             if step % args.ckpt_every == 0:
                 ckpt.save(step, state)
+                if args.resume_data:
+                    # Replay-engine suspend is derived (shadow simulation),
+                    # so the stream keeps flowing while this writes.
+                    loader.suspend(data_ck)
         epoch += 1
     ckpt.wait()
     print(f"done: {step} steps in {time.time()-t0:.0f}s; workdir={workdir}")

@@ -40,9 +40,11 @@ the residency.
 
 from __future__ import annotations
 
+import json
 import threading
 import time
 from collections import Counter
+from pathlib import Path
 
 import numpy as np
 
@@ -55,6 +57,8 @@ from ..core.storage import first_read_order, merge_read_schedules
 from .residency import SharedResidency, session_still_needs
 
 __all__ = ["DataService", "JobSession"]
+
+SERVICE_MANIFEST = "service_manifest.json"
 
 
 class _SessionStore:
@@ -152,7 +156,12 @@ class JobSession:
         (shared by :meth:`epoch` and the service pump)."""
         plan = self._begin_epoch(epoch)
         try:
-            yield from self.loader._produce(epoch, plan=plan)
+            for item in self.loader._produce(epoch, plan=plan):
+                # Keep the loader's suspend cursor exact for pump-driven
+                # sessions: the step in hand is consumed the moment this
+                # generator returns from next().
+                self.loader._progress = (epoch, int(item[1]) + 1)
+                yield item
         finally:
             self._end_epoch(epoch)
 
@@ -226,6 +235,7 @@ class DataService:
         prefetch_window: int = 64,
         remote_memory_limit_bytes: int = 1 << 62,
         queue_depth: int = 2,
+        resume_from: "str | Path | None" = None,
     ) -> JobSession:
         """Open a job session with its own protocol state and RNG stream.
 
@@ -233,34 +243,46 @@ class DataService:
         a standalone ``Cluster`` + ``EpochSampler`` + ``RedoxLoader`` stack —
         a single-session service run is byte-identical to that solo run
         (``tests/test_service.py``).
+
+        ``resume_from`` re-opens a session suspended by
+        :meth:`DataService.suspend`: the cluster is restored from the saved
+        snapshot (every other protocol argument is taken from the files, not
+        the keyword defaults) and the session's next epoch continues at the
+        saved step.
         """
         with self._lock:
             if job_id in self._sessions:
                 raise ValueError(f"job {job_id!r} already has an open session")
-        cluster = Cluster(
-            self.plan,
-            num_nodes,
-            policy=policy,
-            seed=seed,
-            store=_SessionStore(self, job_id),
-            prefetch=prefetch,
-            prefetch_window=prefetch_window,
-            remote_memory_limit_bytes=remote_memory_limit_bytes,
-        )
-        sampler = EpochSampler(
-            self.plan.num_files,
-            num_nodes,
-            seed=seed + 1 if sampler_seed is None else sampler_seed,
-        )
-        loader = RedoxLoader(
-            cluster,
-            sampler,
-            batch_per_node=batch_per_node,
-            seq_len=seq_len,
-            pad_id=pad_id,
-            queue_depth=queue_depth,
-            engine=engine,
-        )
+        if resume_from is not None:
+            # Same restore path as a standalone loader — only the store
+            # differs (reads route through the shared residency).
+            loader = RedoxLoader.resume(resume_from, _SessionStore(self, job_id))
+            cluster, sampler = loader.cluster, loader.sampler
+        else:
+            cluster = Cluster(
+                self.plan,
+                num_nodes,
+                policy=policy,
+                seed=seed,
+                store=_SessionStore(self, job_id),
+                prefetch=prefetch,
+                prefetch_window=prefetch_window,
+                remote_memory_limit_bytes=remote_memory_limit_bytes,
+            )
+            sampler = EpochSampler(
+                self.plan.num_files,
+                num_nodes,
+                seed=seed + 1 if sampler_seed is None else sampler_seed,
+            )
+            loader = RedoxLoader(
+                cluster,
+                sampler,
+                batch_per_node=batch_per_node,
+                seq_len=seq_len,
+                pad_id=pad_id,
+                queue_depth=queue_depth,
+                engine=engine,
+            )
         session = JobSession(self, job_id, cluster, sampler, loader)
         if self.co_refill:
             self._install_refill_filter(session)
@@ -305,6 +327,70 @@ class DataService:
             self.close_session(job_id)
         self.residency.end_epoch()
 
+    # ------------------------------------------------------ suspend/resume
+    def suspend(self, out_dir: "str | Path") -> Path:
+        """Atomically checkpoint every open session's data-plane state.
+
+        Call with no stream mid-flight (the pump abandoned or between
+        epochs): each session writes its loader suspend files
+        (``RedoxLoader.suspend`` — a derived shadow snapshot for replay
+        sessions, the live cluster state otherwise) under one directory,
+        plus a service manifest. Shared-residency claims are *not*
+        serialized — they are a pure function of the per-session plans and
+        cursors, and :meth:`resume`'s plan_epoch reinstalls exactly the
+        remaining claim counts.
+        """
+        with self._lock:
+            assert not self._active_epoch, (
+                "suspend() with a session stream mid-flight; abandon the "
+                "pump (or finish the epoch) first"
+            )
+            sessions = self.sessions
+        if self.co_refill and any(s.engine == "replay" for s in sessions):
+            # A replay session's snapshot is derived on a filter-less solo
+            # shadow (EpochPlanner.state_at); under co-refill the executed
+            # prefix followed the jointly-planned tie-breaks instead, so the
+            # derived state would not match what was actually consumed —
+            # refuse rather than resume a diverging stream. Live-engine
+            # co-refill sessions snapshot their real state and are fine.
+            raise NotImplementedError(
+                "suspend() of a co_refill service with replay sessions is "
+                "not supported: their snapshots are derived by solo shadow "
+                "simulation, which diverges from the jointly-planned "
+                "co-refill prefix; use co_refill=False or live engines"
+            )
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        jobs = []
+        for i, s in enumerate(sessions):
+            sub = f"session_{i:03d}"
+            s.loader.suspend(out_dir / sub)
+            jobs.append({"job_id": s.job_id, "dir": sub})
+        (out_dir / SERVICE_MANIFEST).write_text(json.dumps(dict(
+            co_refill=self.co_refill,
+            cache_limit_bytes=self.residency.cache_limit_bytes,
+            jobs=jobs,
+        )))
+        return out_dir
+
+    @classmethod
+    def resume(cls, in_dir: "str | Path", store, **overrides) -> "DataService":
+        """Rebuild a suspended service — sessions, protocol state, and the
+        exact remaining residency claims — from :meth:`suspend` files in a
+        fresh process holding only the re-opened ChunkStore."""
+        in_dir = Path(in_dir)
+        mf = json.loads((in_dir / SERVICE_MANIFEST).read_text())
+        svc = cls(
+            store,
+            cache_limit_bytes=overrides.pop(
+                "cache_limit_bytes", mf.get("cache_limit_bytes")
+            ),
+            co_refill=overrides.pop("co_refill", mf.get("co_refill", False)),
+        )
+        for job in mf["jobs"]:
+            svc.open_session(job["job_id"], resume_from=in_dir / job["dir"])
+        return svc
+
     # ------------------------------------------------------------- planning
     _PLAN_EPOCHS_KEPT = 4  # newest epochs whose plans/claims stay cached
 
@@ -330,16 +416,31 @@ class DataService:
             plans = self._epoch_plans.setdefault(epoch, {})
             missing = [s for s in sessions if s.job_id not in plans]
             if missing:
-                if self.co_refill and len(missing) > 1:
+                # Sessions resumed mid-epoch get *suffix* plans cut from
+                # their snapshots — their claim counts are exactly the
+                # remaining reads, so the shared residency stays exact
+                # across a suspend/resume of the whole service.
+                resumed = {
+                    s.job_id: s.loader._resume
+                    for s in missing
+                    if s.loader._resume is not None
+                    and s.loader._resume["epoch"] == epoch
+                }
+                if self.co_refill and len(missing) > 1 and not resumed:
                     fresh = self._joint_plan(missing, epoch)
                 else:
-                    fresh = {
-                        s.job_id: EpochPlanner(s.cluster).plan(
-                            s.sampler, epoch, s.loader.batch_per_node,
-                            stepping="floor_tail",
-                        )
-                        for s in missing
-                    }
+                    fresh = {}
+                    for s in missing:
+                        rp = resumed.get(s.job_id)
+                        if rp is not None:
+                            fresh[s.job_id] = EpochPlanner(s.cluster).plan_from(
+                                rp["snapshot"]
+                            )
+                        else:
+                            fresh[s.job_id] = EpochPlanner(s.cluster).plan(
+                                s.sampler, epoch, s.loader.batch_per_node,
+                                stepping="floor_tail",
+                            )
                 plans.update(fresh)
             claims = merge_read_schedules(
                 [_per_step_chunks(plans[s.job_id]) for s in sessions
@@ -511,24 +612,47 @@ class DataService:
         order matches the merged plan order (maximal schedule hits).
         Sessions closed mid-epoch (``close_session``) are detached at the
         next round; the survivors' streams are unaffected.
+
+        Rounds are cursor-aware: a pump abandoned mid-round (suspend) left
+        some sessions one step ahead, so the resumed pump serves the lagging
+        sessions first — the combined (job, step) stream continues exactly
+        where the suspended one stopped.
         """
         sessions = self.sessions
         if any(s.engine == "replay" for s in sessions):
             self.plan_epoch(epoch)  # cached plans reused; claims reinstalled
         gens = {s.job_id: s._produce_guarded(epoch) for s in sessions}
+        cursors = {
+            s.job_id: (
+                s.loader._resume["start_step"]
+                if s.loader._resume is not None
+                and s.loader._resume["epoch"] == epoch
+                else 0
+            )
+            for s in sessions
+        }
+        for s in sessions:
+            # Pin every loader's suspend cursor up front: a pump abandoned
+            # before reaching some session must still be able to suspend it
+            # (at the point it would have continued from).
+            s.loader._progress = (epoch, cursors[s.job_id])
         live = list(sessions)
         try:
             while live:
+                round_ = min(cursors[s.job_id] for s in live)
                 for s in list(live):
                     if s.closed:
                         live.remove(s)
                         gens[s.job_id].close()
+                        continue
+                    if cursors[s.job_id] != round_:
                         continue
                     try:
                         item = next(gens[s.job_id])
                     except StopIteration:
                         live.remove(s)
                         continue
+                    cursors[s.job_id] = int(item[1]) + 1
                     yield s.job_id, s.loader._assemble(*item)
         finally:
             for s in live:  # consumer abandoned the pump mid-epoch

@@ -1,0 +1,423 @@
+"""Differential harness for elastic data-plane equivalence (DESIGN.md §10).
+
+One epoch *scenario* — (cluster config, policy, batch, optional mid-epoch
+``fail_node``/``join_node`` schedules) — can be executed many ways:
+
+* the uninterrupted live walk (``engine="step"`` or ``"per_access"``);
+* replay of a clairvoyant :class:`EpochPlan`;
+* a walk chopped by suspend/restore at every k-th **step barrier**, each hop
+  persisting a :class:`ClusterSnapshot` to npz+manifest files and rebuilding
+  a brand-new cluster from them (simulating a fresh process);
+* the replay engine chopped the same way (``EpochPlanner.state_at`` +
+  ``plan_from`` suffix re-planning per hop);
+* the reference walk chopped at every k-th **access** — suspension at an
+  arbitrary access ``t``, mid-step, mid-node.
+
+All of them must produce the *identical* :class:`EpochStream`: returned-id
+streams, chunk-load and ship event sequences, per-step StepIO grids, and
+end-of-epoch NodeStats — plus exactly-once consumption. ``test_elastic.py``
+drives the grid; ``test_planner.py``/``test_service.py`` reuse the
+comparison helpers, making this the template for equivalence tests.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import ChunkingPlan, Cluster, EpochPlanner, EpochSampler
+from repro.core.elastic import ClusterSnapshot
+from repro.core.planner import PlanRecorder
+from repro.core.stats import StepIO
+
+IO_FIELDS = ("chunk_loads", "disk_bytes", "file_reads", "net_messages", "net_bytes")
+
+
+def io_key(io: StepIO) -> tuple:
+    """The exact (non-measured) counters of a StepIO."""
+    return tuple(getattr(io, f) for f in IO_FIELDS)
+
+
+def make(n=960, c=8, slots=64, nodes=3, seed=0, sizes=None, **kw):
+    """A small id-space cluster + sampler (same knobs as test_planner)."""
+    if sizes is None:
+        sizes = np.full(n, 100, dtype=np.int64)
+    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
+    cluster = Cluster(plan, nodes, seed=seed, **kw)
+    sampler = EpochSampler(n, nodes, seed=seed + 99)
+    return cluster, sampler
+
+
+# --------------------------------------------------------------- stream record
+@dataclasses.dataclass
+class EpochStream:
+    """Everything observable about one epoch execution."""
+
+    returned: list          # per node: np.int64[...] full consumption order
+    io_grid: list           # per step: {node: io_key tuple} (absent == zeros)
+    loads: list             # (step, owner, chunk, fill_rate, files tuple)
+    ships: list             # (step, src, dst, file, loc)
+    node_stats: list        # NodeStats per node
+
+    def all_returned(self) -> np.ndarray:
+        parts = [r for r in self.returned if r.size]
+        return np.concatenate(parts) if parts else np.empty(0, np.int64)
+
+
+def _normalize_io(io_by_node, num_nodes) -> dict:
+    out = {}
+    for r in range(num_nodes):
+        key = io_key(io_by_node.get(r, StepIO()))
+        if any(key):
+            out[r] = key
+    return out
+
+
+def _events_from_recorder(rec: PlanRecorder, step_offset: int = 0):
+    loads = [
+        (s + step_offset, o, k, fr, tuple(f.tolist()))
+        for s, o, k, fr, f in zip(
+            rec.load_step, rec.load_owner, rec.load_chunk,
+            rec.load_fill_rate, rec.load_files,
+        )
+    ]
+    ships = [
+        (s + step_offset, src, dst, f, loc)
+        for s, src, dst, f, loc in zip(
+            rec.ship_step, rec.ship_src, rec.ship_dst, rec.ship_file, rec.ship_loc,
+        )
+    ]
+    return loads, ships
+
+
+def _events_from_plan(plan):
+    loads = [
+        (int(s) + plan.start_step, int(o), int(k), float(fr),
+         tuple(plan.load_files(i).tolist()))
+        for i, (s, o, k, fr) in enumerate(zip(
+            plan.load_step, plan.load_owner, plan.load_chunk, plan.load_fill_rate,
+        ))
+    ]
+    ships = [
+        (int(s) + plan.start_step, int(src), int(dst), int(f), int(loc))
+        for s, src, dst, f, loc in zip(
+            plan.ship_step, plan.ship_src, plan.ship_dst,
+            plan.ship_file, plan.ship_loc,
+        )
+    ]
+    return loads, ships
+
+
+class _Accum:
+    """Accumulates an EpochStream across suspension segments."""
+
+    def __init__(self):
+        self.returned: "dict[int, list]" = {}
+        self.io_grid: list = []
+        self.loads: list = []
+        self.ships: list = []
+        self.node_stats = None
+
+    def add_step(self, returned_per_node, io_by_node, num_nodes):
+        for r in range(num_nodes):
+            ret = returned_per_node[r] if r < len(returned_per_node) else None
+            if ret is not None and len(ret):
+                self.returned.setdefault(r, []).extend(int(x) for x in ret)
+        self.io_grid.append(_normalize_io(io_by_node, num_nodes))
+
+    def finish(self, cluster) -> EpochStream:
+        self.node_stats = [n.stats.copy() for n in cluster.nodes]
+        num_nodes = cluster.num_nodes
+        return EpochStream(
+            returned=[
+                np.asarray(self.returned.get(r, []), dtype=np.int64)
+                for r in range(num_nodes)
+            ],
+            io_grid=self.io_grid,
+            loads=self.loads,
+            ships=self.ships,
+            node_stats=self.node_stats,
+        )
+
+
+# ------------------------------------------------------------------ recorders
+def record_uninterrupted(
+    make_kwargs, batch, *, engine="step", epoch=0, failures=None, joins=None
+) -> EpochStream:
+    """One live, unchopped epoch walk."""
+    cluster, sampler = make(**make_kwargs)
+    rec = PlanRecorder()
+    acc = _Accum()
+    for _, returned, _, io_by_node in cluster.epoch_stream(
+        sampler, epoch, batch,
+        engine=engine, recorder=rec, failures=failures, joins=joins,
+    ):
+        acc.add_step(returned, io_by_node, cluster.num_nodes)
+    acc.loads, acc.ships = _events_from_recorder(rec)
+    return acc.finish(cluster)
+
+
+def record_replay(
+    make_kwargs, batch, *, epoch=0, failures=None, joins=None
+) -> EpochStream:
+    """Plan the scenario clairvoyantly, then replay the plan."""
+    cluster, sampler = make(**make_kwargs)
+    plan = EpochPlanner(cluster).plan(
+        sampler, epoch, batch, failures=failures, joins=joins
+    )
+    acc = _Accum()
+    for _, returned, _, io_by_node in cluster.replay_stream(
+        plan, epoch=epoch, batch_per_node=batch
+    ):
+        acc.add_step(returned, io_by_node, cluster.num_nodes)
+    acc.loads, acc.ships = _events_from_plan(plan)
+    return acc.finish(cluster)
+
+
+def _hop(cluster, tmp_path, tag) -> Cluster:
+    """Suspend-to-disk, then rebuild a fresh cluster from the files only."""
+    d = tmp_path / f"hop_{tag}"
+    cluster.snapshot().save(d)
+    snap = ClusterSnapshot.load(d)
+    return Cluster.restore(snap, plan=cluster.plan)
+
+
+def record_suspended(
+    make_kwargs, batch, *, every, engine="step", epoch=0,
+    failures=None, joins=None, tmp_path,
+) -> EpochStream:
+    """The same scenario, suspending/restoring at every ``every``-th step."""
+    cluster, sampler = make(**make_kwargs)
+    acc = _Accum()
+    start, hops = 0, 0
+    while True:
+        rec = PlanRecorder()
+        stream = cluster.epoch_stream(
+            sampler if start == 0 else None, epoch, batch,
+            engine=engine, recorder=rec, failures=failures, joins=joins,
+            start_step=start, resume=start > 0,
+        )
+        steps = 0
+        exhausted = True
+        for _, returned, _, io_by_node in stream:
+            acc.add_step(returned, io_by_node, cluster.num_nodes)
+            steps += 1
+            if steps == every:
+                exhausted = False
+                break
+        loads, ships = _events_from_recorder(rec, step_offset=start)
+        acc.loads.extend(loads)
+        acc.ships.extend(ships)
+        if exhausted:
+            return acc.finish(cluster)
+        stream.close()
+        start += steps
+        cluster = _hop(cluster, tmp_path, hops)
+        hops += 1
+
+
+def record_suspended_replay(
+    make_kwargs, batch, *, every, epoch=0, failures=None, joins=None, tmp_path,
+) -> EpochStream:
+    """Replay chopped at every ``every``-th step: each hop derives the
+    snapshot by shadow simulation (``state_at``) — replay protocol state is
+    implicit — then re-plans and replays only the epoch suffix."""
+    cluster, sampler = make(**make_kwargs)
+    planner = EpochPlanner(cluster)
+    plan = planner.plan(sampler, epoch, batch, failures=failures, joins=joins)
+    acc = _Accum()
+    start, hops = 0, 0
+    while True:
+        acc_loads, acc_ships = _events_from_plan(plan)
+        acc.loads.extend(acc_loads)
+        acc.ships.extend(acc_ships)
+        stream = cluster.replay_stream(plan, epoch=epoch, batch_per_node=batch)
+        steps = 0
+        exhausted = True
+        for _, returned, _, io_by_node in stream:
+            acc.add_step(returned, io_by_node, cluster.num_nodes)
+            steps += 1
+            if steps == every:
+                exhausted = False
+                break
+        if exhausted:
+            return acc.finish(cluster)
+        stream.close()
+        start += steps
+        # the executed prefix's events stay; drop the unexecuted suffix ones
+        acc.loads = [e for e in acc.loads if e[0] < start]
+        acc.ships = [e for e in acc.ships if e[0] < start]
+        snap = EpochPlanner(make(**make_kwargs)[0]).state_at(
+            sampler, epoch, batch, start, failures=failures, joins=joins
+        )
+        d = tmp_path / f"rhop_{hops}"
+        snap.save(d)
+        snap = ClusterSnapshot.load(d)
+        cluster = Cluster.restore(snap, plan=cluster.plan)
+        plan = EpochPlanner(cluster).plan_from(
+            snap, failures=failures, joins=joins
+        )
+        hops += 1
+
+
+def record_suspended_per_access(
+    make_kwargs, batch, *, every, epoch=0, failures=None, joins=None, tmp_path,
+) -> EpochStream:
+    """The reference walk suspended at every ``every``-th **access** —
+    including mid-step, mid-node. Driver loop state (the trainer's own
+    cursor) rides along as JSON; protocol state goes through the snapshot."""
+    cluster, sampler = make(**make_kwargs)
+    cluster.begin_epoch(sampler, epoch)
+    cluster._grid = (batch, "ceil")
+    acc = _Accum()
+    # Driver state, serialized across hops like a trainer checkpoint:
+    state = {"step": 0, "his": None, "count": 0, "io": {}, "partial": {}}
+    hops = 0
+    while True:
+        rec = PlanRecorder()
+        cluster.set_recorder(rec)
+        suspended = _drive_per_access(cluster, acc, rec, state, batch,
+                                      every, failures, joins)
+        cluster.set_recorder(None)
+        loads, ships = _events_from_recorder(rec)
+        acc.loads.extend(loads)
+        acc.ships.extend(ships)
+        if not suspended:
+            cluster._check_epoch_complete()
+            return acc.finish(cluster)
+        d = tmp_path / f"ahop_{hops}"
+        cluster.snapshot(step=state["step"]).save(d)
+        (d / "driver_state.json").write_text(json.dumps(state))
+        snap = ClusterSnapshot.load(d)
+        state = json.loads((d / "driver_state.json").read_text())
+        cluster = Cluster.restore(snap, plan=cluster.plan)
+        hops += 1
+
+
+def _drive_per_access(cluster, acc, rec, state, batch, every, failures, joins):
+    """Continue the manual reference walk; True when suspending mid-epoch."""
+    while True:
+        step = state["step"]
+        if state["his"] is None:
+            # Step barrier: elastic events fire here, exactly once.
+            if failures and step in failures:
+                cluster.fail_node(
+                    failures[step], int(cluster.positions[failures[step]])
+                )
+            if joins and step in joins:
+                for _ in range(joins[step]):
+                    cluster.join_node()
+            if cluster._live_exhausted():
+                return False
+            state["his"] = [
+                int(min(cluster.positions[r] + batch, cluster.sequences[r].size))
+                for r in range(cluster.num_nodes)
+            ]
+            state["io"] = {}
+            state["partial"] = {}
+        rec.step = step  # absolute step for load/ship attribution
+        io_by_node = {
+            int(r): StepIO(**dict(zip(IO_FIELDS, v)))
+            for r, v in state["io"].items()
+        }
+        for r in range(cluster.num_nodes):
+            if cluster.failed[r]:
+                continue
+            hi = state["his"][r] if r < len(state["his"]) else 0
+            while int(cluster.positions[r]) < hi:
+                pos = int(cluster.positions[r])
+                f, _ = cluster.access(
+                    r, pos, int(cluster.sequences[r][pos]), io_by_node
+                )
+                state["partial"].setdefault(str(r), []).append(int(f))
+                state["count"] += 1
+                if every and state["count"] % every == 0:
+                    state["io"] = {
+                        str(k): list(io_key(v)) for k, v in io_by_node.items()
+                    }
+                    return True
+        returned = [
+            np.asarray(state["partial"].get(str(r), []), dtype=np.int64)
+            for r in range(cluster.num_nodes)
+        ]
+        acc.add_step(returned, io_by_node, cluster.num_nodes)
+        state.update({"step": step + 1, "his": None, "io": {}, "partial": {}})
+
+
+# ------------------------------------------------------------- golden streams
+#: Tiny fixed scenario behind tests/golden/streams.json: small enough to
+#: commit, big enough to exercise misses, redirection, and remote prefetch.
+GOLDEN_CONFIG = dict(n=96, c=4, slots=16, nodes=2, seed=7)
+GOLDEN_BATCH = 8
+
+
+def golden_streams() -> dict:
+    """Per-(policy, engine) returned-id streams of the golden scenario.
+
+    Committed under ``tests/golden/streams.json`` (regenerate with
+    ``python tests/golden/regen.py``) so a refactor that silently changes
+    the shuffle — in any one engine — fails against the recorded stream
+    instead of only against the other engines.
+    """
+    from repro.core import EpochPlanner as _Planner
+
+    out = {"config": dict(GOLDEN_CONFIG, batch=GOLDEN_BATCH), "streams": {}}
+    for policy in ("max_fill", "random"):
+        per_engine = {}
+        for engine in ("step", "per_access"):
+            cluster, sampler = make(policy=policy, **GOLDEN_CONFIG)
+            res = cluster.run_epoch(sampler, 0, GOLDEN_BATCH, engine=engine)
+            per_engine[engine] = [r.tolist() for r in res.returned]
+        cluster, sampler = make(policy=policy, **GOLDEN_CONFIG)
+        plan = _Planner(cluster).plan(sampler, 0, GOLDEN_BATCH)
+        res = cluster.run_epoch(sampler, 0, GOLDEN_BATCH, plan=plan)
+        per_engine["replay"] = [r.tolist() for r in res.returned]
+        out["streams"][policy] = per_engine
+    return out
+
+
+# ----------------------------------------------------------------- assertions
+def assert_node_stats_equal(a, b, *, skip=("read_wait_s", "peak_inflight_reads")):
+    """NodeStats lists equal on every exact counter (measured ones skipped)."""
+    assert len(a) == len(b)
+    for na, nb in zip(a, b):
+        for f in dataclasses.fields(type(na)):
+            if f.name in skip:
+                continue
+            assert getattr(na, f.name) == getattr(nb, f.name), f.name
+
+
+def assert_streams_equal(a: EpochStream, b: EpochStream, *, num_files=None):
+    """Full differential equality of two EpochStreams (+ exactly-once)."""
+    assert len(a.returned) == len(b.returned), "node counts differ"
+    for r, (ra, rb) in enumerate(zip(a.returned, b.returned)):
+        np.testing.assert_array_equal(ra, rb, err_msg=f"returned stream, node {r}")
+    assert len(a.io_grid) == len(b.io_grid), "step counts differ"
+    for s, (ia, ib) in enumerate(zip(a.io_grid, b.io_grid)):
+        assert ia == ib, f"StepIO grid diverges at step {s}: {ia} != {ib}"
+    assert a.loads == b.loads, "chunk-load event sequences differ"
+    assert a.ships == b.ships, "ship event sequences differ"
+    assert_node_stats_equal(a.node_stats, b.node_stats)
+    if num_files is not None:
+        assert sorted(a.all_returned().tolist()) == list(range(num_files)), (
+            "exactly-once violated"
+        )
+
+
+def assert_same_epoch(res_a, res_b, rec_a=None, rec_b=None):
+    """EpochResult/PlanRecorder equality (the test_planner.py contract)."""
+    for a, b in zip(res_a.returned, res_b.returned):
+        np.testing.assert_array_equal(a, b)
+    assert res_a.per_node_step_io == res_b.per_node_step_io
+    assert res_a.node_stats == res_b.node_stats
+    if rec_a is not None and rec_b is not None:
+        assert rec_a.load_chunk == rec_b.load_chunk
+        assert rec_a.load_owner == rec_b.load_owner
+        assert rec_a.load_step == rec_b.load_step
+        assert rec_a.load_fill_rate == rec_b.load_fill_rate
+        for fa, fb in zip(rec_a.load_files, rec_b.load_files):
+            np.testing.assert_array_equal(fa, fb)
+        assert rec_a.ship_file == rec_b.ship_file
+        assert rec_a.ship_loc == rec_b.ship_loc
+        assert rec_a.ship_src == rec_b.ship_src
+        assert rec_a.ship_dst == rec_b.ship_dst

@@ -1,0 +1,30 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/streams.json (the golden-stream fixtures).
+
+Run after an *intentional* change to the protocol's shuffle/redirection
+behaviour, then review the diff — an unintentional stream change should
+fail tests/test_golden_streams.py instead of being regenerated away:
+
+    python tests/golden/regen.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve()
+sys.path.insert(0, str(HERE.parents[2] / "src"))
+sys.path.insert(0, str(HERE.parents[1]))  # tests/ for elastic_harness
+
+from elastic_harness import golden_streams  # noqa: E402
+
+
+def main() -> int:
+    out = HERE.parent / "streams.json"
+    out.write_text(json.dumps(golden_streams(), indent=1) + "\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -65,6 +65,26 @@ class TestCheckpoint:
         steps = sorted(p.name for p in tmp_path.iterdir())
         assert len(steps) == 2  # gc keeps last 2
 
+    def test_async_wait_after_failed_save_cleans_up(self, tmp_path):
+        """A save abandoned by a worker-thread failure leaves no
+        .tmp_step_* behind and wait() both joins the thread and surfaces
+        the error exactly once."""
+        import pytest
+
+        cfg, model, step_fn, state = make_setup()
+        save_checkpoint(tmp_path, 7, state)  # occupy step 7: next save fails
+        ck = AsyncCheckpointer(tmp_path, keep=2)
+        ck.save(7, state)
+        with pytest.raises(FileExistsError):
+            ck.wait()
+        assert ck._thread is None  # joined, not leaked
+        leftovers = [p for p in tmp_path.iterdir() if p.name.startswith(".tmp_step_")]
+        assert leftovers == []
+        ck.wait()  # error was consumed; a second wait is a clean no-op
+        ck.save(8, state)  # the checkpointer is still usable
+        ck.wait()
+        assert latest_step(tmp_path) == 8
+
     def test_elastic_reshard_on_restore(self, tmp_path):
         """Save unsharded; restore with explicit device placement (the
         mechanism behind mesh-shape changes on restart)."""
@@ -103,6 +123,49 @@ class TestFaultTolerance:
                 sm.record(w, 0.1)
             sm.record(3, 0.5)
         assert sm.stragglers() == [3]
+
+    def test_straggler_two_workers_slow_one_flagged(self):
+        """Regression: the upper-middle 'median' of 2 workers was the slow
+        worker's own mean, so it could never exceed threshold x itself;
+        the leave-one-out median compares it against its peer."""
+        sm = StragglerMonitor(2, threshold=2.0)
+        for _ in range(8):
+            sm.record(0, 0.1)
+            sm.record(1, 0.5)
+        assert sm.stragglers() == [1]
+
+    def test_straggler_all_equal_none_flagged(self):
+        sm = StragglerMonitor(4, threshold=2.0)
+        for _ in range(8):
+            for w in range(4):
+                sm.record(w, 0.1)
+        assert sm.stragglers() == []
+
+    def test_straggler_empty_window_flagged(self):
+        """A silent worker is flagged once its peers report; with no
+        reports from anyone there is no baseline and nobody is flagged."""
+        sm = StragglerMonitor(3, threshold=2.0)
+        assert sm.stragglers() == []  # nobody reported yet
+        for _ in range(4):
+            sm.record(0, 0.1)
+            sm.record(1, 0.1)
+        assert sm.stragglers() == [2]  # worker 2 never reported
+
+    def test_heartbeat_mark_dead_vs_ping_interleaving(self):
+        """mark_dead and ping may race (coordinator vs a slow worker's last
+        gasp): a ping AFTER mark_dead resurrects the worker — exactly the
+        elastic rejoin semantics Cluster.join_node gives the data plane —
+        while a mark_dead after the ping wins again."""
+        hb = Heartbeat(2, timeout_s=5.0)
+        hb.mark_dead(0)
+        assert hb.dead_workers() == [0]
+        hb.ping(0)  # late ping: the worker is actually alive
+        assert hb.dead_workers() == []
+        hb.ping(1)
+        hb.mark_dead(1)  # coordinator overrules: declared dead stays dead
+        assert hb.dead_workers() == [1]
+        hb.mark_dead(1)  # idempotent
+        assert hb.dead_workers() == [1]
 
     def test_train_through_failure_with_redox_remap(self, tmp_path):
         """End-to-end: training from the Redox loader survives a data-node

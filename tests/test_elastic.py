@@ -1,0 +1,322 @@
+"""Elastic data plane: differential suspend/resume + scale-up tests.
+
+The contract (DESIGN.md §10): a mid-epoch snapshot/restore — through npz +
+manifest files, into a fresh cluster — at *any* boundary (every k-th step,
+every k-th access, before/after elastic events) never changes anything
+observable: returned streams, load/ship events, StepIO grids, NodeStats,
+exactly-once. ``elastic_harness`` holds the execution modes; this file
+drives the grid and the join/fail unit semantics.
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from elastic_harness import (
+    assert_streams_equal,
+    make,
+    record_replay,
+    record_suspended,
+    record_suspended_per_access,
+    record_suspended_replay,
+    record_uninterrupted,
+)
+from repro.core import Cluster, RedoxLoader
+from repro.core.elastic import ClusterSnapshot
+
+pytestmark = pytest.mark.elastic
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property test becomes a no-op; the grid below remains
+    HAVE_HYPOTHESIS = False
+
+
+SCENARIOS = {
+    "plain": dict(failures=None, joins=None),
+    # one join_node and one fail_node mid-suffix (acceptance criteria)
+    "join_then_fail": dict(failures={5: 1}, joins={3: 1}),
+}
+
+
+class TestDifferentialSuspendResume:
+    """Uninterrupted vs chopped-at-every-k, for all engines and policies."""
+
+    @pytest.mark.parametrize("policy", ["max_fill", "random"])
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    @pytest.mark.parametrize("every", [1, 3])
+    def test_step_level_suspension_all_engines(
+        self, tmp_path, policy, scenario, every
+    ):
+        kw = dict(nodes=3, policy=policy)
+        ev = SCENARIOS[scenario]
+        ref = record_uninterrupted(kw, 16, engine="step", **ev)
+        modes = {
+            "per_access": record_uninterrupted(kw, 16, engine="per_access", **ev),
+            "replay": record_replay(kw, 16, **ev),
+            "susp-step": record_suspended(
+                kw, 16, every=every, engine="step",
+                tmp_path=tmp_path / "s", **ev,
+            ),
+            "susp-per_access": record_suspended(
+                kw, 16, every=every, engine="per_access",
+                tmp_path=tmp_path / "p", **ev,
+            ),
+            "susp-replay": record_suspended_replay(
+                kw, 16, every=every, tmp_path=tmp_path / "r", **ev,
+            ),
+        }
+        for name, stream in modes.items():
+            assert_streams_equal(ref, stream, num_files=960)
+
+    @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+    def test_access_level_suspension(self, tmp_path, scenario):
+        """Suspend at every 37th *access* — mid-step, mid-node."""
+        kw = dict(nodes=3)
+        ev = SCENARIOS[scenario]
+        ref = record_uninterrupted(kw, 16, engine="per_access", **ev)
+        got = record_suspended_per_access(
+            kw, 16, every=37, tmp_path=tmp_path, **ev
+        )
+        assert_streams_equal(ref, got, num_files=960)
+
+    def test_variable_sizes_tight_remote_memory(self, tmp_path):
+        rng = np.random.default_rng(5)
+        sizes = rng.integers(40, 400, 960).astype(np.int64)
+        kw = dict(nodes=3, sizes=sizes, remote_memory_limit_bytes=2_000)
+        ev = SCENARIOS["join_then_fail"]
+        ref = record_uninterrupted(kw, 16, engine="step", **ev)
+        got = record_suspended(
+            kw, 16, every=2, engine="step", tmp_path=tmp_path, **ev
+        )
+        assert_streams_equal(ref, got, num_files=960)
+
+    def test_single_node_cluster(self, tmp_path):
+        kw = dict(nodes=1)
+        ref = record_uninterrupted(kw, 16, engine="step", joins={2: 1})
+        got = record_suspended(
+            kw, 16, every=2, engine="step", tmp_path=tmp_path, joins={2: 1}
+        )
+        assert_streams_equal(ref, got, num_files=960)
+
+
+class TestJoinNode:
+    def test_join_rebalances_ownership_and_tails(self):
+        cluster, sampler = make(nodes=3)
+        cluster.begin_epoch(sampler, 0)
+        for _ in cluster.epoch_stream(sampler, 0, 16):
+            break  # run one step so positions are non-trivial
+        before_positions = cluster.positions.copy()
+        before_total = sum(s.size for s in cluster.sequences)
+        new = cluster.join_node()
+        assert new == 3 and cluster.num_nodes == 4
+        # position stability: existing cursors untouched, new starts at 0
+        np.testing.assert_array_equal(cluster.positions[:3], before_positions)
+        assert cluster.positions[3] == 0
+        # the new node owns a fair share of the groups
+        counts = [int((cluster.owner_of_group == r).sum()) for r in range(4)]
+        assert counts[3] == cluster.plan.num_groups // 4
+        # no access lost or duplicated by the tail handoff
+        assert sum(s.size for s in cluster.sequences) == before_total
+        # prefixes stayed intact
+        full = sampler.node_sequences(0)
+        for r in range(3):
+            np.testing.assert_array_equal(
+                cluster.sequences[r], full[r][: cluster.sequences[r].size]
+            )
+
+    def test_join_exactly_once_and_drained(self):
+        for policy in ("max_fill", "random"):
+            cluster, sampler = make(nodes=2, policy=policy)
+            res = cluster.run_epoch(sampler, 0, 16, joins={2: 1})
+            assert sorted(np.concatenate(res.returned).tolist()) == list(range(960))
+            for node in cluster.nodes:
+                assert node.memory.is_empty()
+            for rm in cluster.remote_mem:
+                assert len(rm) == 0
+
+    def test_join_after_fail_reuses_protocol(self):
+        cluster, sampler = make(nodes=3)
+        res = cluster.run_epoch(sampler, 0, 16, failures={2: 0}, joins={4: 1})
+        assert sorted(np.concatenate(res.returned).tolist()) == list(range(960))
+
+
+class TestSnapshotFiles:
+    def test_round_trip_preserves_everything(self, tmp_path):
+        cluster, sampler = make(nodes=3)
+        gen = cluster.epoch_stream(sampler, 0, 16)
+        for i, _ in enumerate(gen):
+            if i == 3:
+                break
+        gen.close()
+        snap = cluster.snapshot()
+        snap.save(tmp_path)
+        loaded = ClusterSnapshot.load(tmp_path)
+        assert loaded.epoch == 0 and loaded.step == 4
+        assert loaded.grid == {"batch_per_node": 16, "stepping": "ceil"}
+        np.testing.assert_array_equal(loaded.positions, cluster.positions)
+        restored = Cluster.restore(loaded, plan=cluster.plan)
+        for a, b in zip(cluster.nodes, restored.nodes):
+            np.testing.assert_array_equal(a.memory.resident, b.memory.resident)
+            np.testing.assert_array_equal(a.consumed, b.consumed)
+            assert a.rng.bit_generator.state == b.rng.bit_generator.state
+            assert a.stats == b.stats
+            assert a.memory.used_bytes == b.memory.used_bytes
+            assert a.memory.peak_bytes == b.memory.peak_bytes
+
+    def test_torn_snapshot_rejected(self, tmp_path):
+        """A crash between the npz and manifest overwrites must not resume
+        from mixed state: load() verifies the shared per-save token."""
+        import json
+
+        cluster, sampler = make(nodes=2)
+        cluster.begin_epoch(sampler, 0)
+        cluster.snapshot().save(tmp_path)
+        mf = json.loads((tmp_path / "data_manifest.json").read_text())
+        mf["token"] = "0" * 32  # manifest from a different save() call
+        (tmp_path / "data_manifest.json").write_text(json.dumps(mf))
+        with pytest.raises(ValueError, match="torn snapshot"):
+            ClusterSnapshot.load(tmp_path)
+
+    def test_restore_rejects_mismatched_plan(self, tmp_path):
+        cluster, sampler = make(nodes=2)
+        cluster.begin_epoch(sampler, 0)
+        cluster.snapshot().save(tmp_path)
+        snap = ClusterSnapshot.load(tmp_path)
+        other, _ = make(nodes=2, n=480, slots=32)
+        with pytest.raises(ValueError, match="different ChunkingPlan"):
+            Cluster.restore(snap, plan=other.plan)
+
+    def test_snapshot_requires_epoch(self):
+        cluster, _ = make(nodes=2)
+        with pytest.raises(AssertionError, match="outside an epoch"):
+            cluster.snapshot()
+
+
+class TestLoaderSuspendResume:
+    @pytest.mark.parametrize("engine", ["replay", "step", "per_access"])
+    def test_resumed_batches_identical(self, tmp_path, engine):
+        from repro.core import ChunkStore, EpochSampler
+        from repro.data import SyntheticTokenDataset
+
+        ds = SyntheticTokenDataset(192, vocab_size=97, mean_len=48, seed=3)
+        ds.build_store(tmp_path / "chunks", 4, num_slots=16, seed=1)
+
+        def fresh():
+            return ChunkStore.open(tmp_path / "chunks")
+
+        sampler = EpochSampler(192, 2, seed=4)
+        store = fresh()
+        loader = RedoxLoader(
+            Cluster(store.plan, 2, store=store, seed=2), sampler,
+            batch_per_node=8, seq_len=32, engine=engine,
+        )
+        ref = [
+            (b["step"], b["tokens"].copy(), b["returned"].copy())
+            for b in loader.epoch(0)
+        ]
+        store.close()
+
+        store = fresh()
+        loader = RedoxLoader(
+            Cluster(store.plan, 2, store=store, seed=2), sampler,
+            batch_per_node=8, seq_len=32, engine=engine,
+        )
+        got = []
+        for b in loader.epoch(0):
+            got.append((b["step"], b["tokens"].copy(), b["returned"].copy()))
+            if b["step"] == 2:
+                break
+        ck = tmp_path / "data_ck"
+        loader.suspend(ck)
+        store.close()
+
+        store = fresh()  # "fresh process": only the store + the files
+        loader2 = RedoxLoader.resume(ck, store)
+        assert loader2.resume_point == (0, 3)
+        got += [
+            (b["step"], b["tokens"].copy(), b["returned"].copy())
+            for b in loader2.epoch(0)
+        ]
+        store.close()
+
+        assert [s for s, _, _ in ref] == [s for s, _, _ in got]
+        for (_, ta, ra), (_, tb, rb) in zip(ref, got):
+            np.testing.assert_array_equal(ta, tb)
+            np.testing.assert_array_equal(ra, rb)
+
+    def test_resumed_loader_rejects_other_epochs(self, tmp_path):
+        """Asking a mid-epoch-resumed loader for a different epoch must be
+        a clear error, not a drain-assertion crash or a dropped suffix."""
+        from repro.core import ChunkStore, EpochSampler
+        from repro.data import SyntheticTokenDataset
+
+        ds = SyntheticTokenDataset(96, vocab_size=97, mean_len=32, seed=3)
+        ds.build_store(tmp_path / "chunks", 4, num_slots=16, seed=1)
+        store = ChunkStore.open(tmp_path / "chunks")
+        loader = RedoxLoader(
+            Cluster(store.plan, 1, store=store, seed=2),
+            EpochSampler(96, 1, seed=4),
+            batch_per_node=8, seq_len=32, engine="step",
+        )
+        for b in loader.epoch(0):
+            break
+        loader.suspend(tmp_path / "ck")
+        store.close()
+        store = ChunkStore.open(tmp_path / "chunks")
+        loader2 = RedoxLoader.resume(tmp_path / "ck", store)
+        with pytest.raises(RuntimeError, match="resumed mid-epoch 0"):
+            next(loader2.epoch(1))
+        store.close()
+
+    def test_live_async_suspend_refused(self, tmp_path):
+        from repro.core import ChunkStore, EpochSampler
+        from repro.data import SyntheticTokenDataset
+
+        ds = SyntheticTokenDataset(96, vocab_size=97, mean_len=32, seed=3)
+        ds.build_store(tmp_path / "chunks", 4, num_slots=16, seed=1)
+        store = ChunkStore.open(tmp_path / "chunks")
+        loader = RedoxLoader(
+            Cluster(store.plan, 1, store=store, seed=2),
+            EpochSampler(96, 1, seed=4),
+            batch_per_node=8, seq_len=32, engine="step",
+        )
+        gen = loader.epoch_async(0)
+        next(gen)
+        gen.close()
+        with pytest.raises(RuntimeError, match="epoch_async"):
+            loader.suspend(tmp_path / "ck")
+        store.close()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        nodes=st.integers(1, 4),
+        every=st.integers(5, 97),
+        policy=st.sampled_from(["max_fill", "random"]),
+        seed=st.integers(0, 1000),
+        event=st.sampled_from(["none", "fail", "join", "both"]),
+    )
+    def test_suspend_at_random_access_property(nodes, every, policy, seed, event):
+        """Suspend at a random access cadence, restore, continue — the
+        stream equals the uninterrupted run, across node counts and a
+        mid-suffix fail_node/join_node (satellite: elastic property)."""
+        kw = dict(n=240, c=4, slots=16, nodes=nodes, seed=seed, policy=policy)
+        failures = {3: nodes - 1} if event in ("fail", "both") and nodes > 1 else None
+        joins = {2: 1} if event in ("join", "both") else None
+        ref = record_uninterrupted(
+            kw, 8, engine="per_access", failures=failures, joins=joins
+        )
+        with tempfile.TemporaryDirectory() as d:
+            got = record_suspended_per_access(
+                kw, 8, every=every, tmp_path=Path(d),
+                failures=failures, joins=joins,
+            )
+        assert_streams_equal(ref, got, num_files=240)

@@ -1,0 +1,56 @@
+"""Golden-stream regression fixtures.
+
+The equivalence tests prove the three engines agree with *each other*; a
+refactor that changes the shuffle in all of them at once (a reordered RNG
+draw, a different tie-break) would still pass those. These fixtures pin the
+absolute streams: every (policy, engine) returned-id stream of the tiny
+golden scenario must match ``tests/golden/streams.json`` byte for byte.
+
+Intentional changes: regenerate with ``python tests/golden/regen.py`` and
+review the diff in the PR.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from elastic_harness import GOLDEN_BATCH, GOLDEN_CONFIG, golden_streams
+
+GOLDEN = Path(__file__).parent / "golden" / "streams.json"
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.fixture(scope="module")
+def current():
+    return golden_streams()
+
+
+def test_fixture_matches_generator_config(fixture):
+    assert fixture["config"] == dict(GOLDEN_CONFIG, batch=GOLDEN_BATCH), (
+        "golden scenario changed; run python tests/golden/regen.py and "
+        "review the stream diff"
+    )
+
+
+@pytest.mark.parametrize("policy", ["max_fill", "random"])
+@pytest.mark.parametrize("engine", ["step", "per_access", "replay"])
+def test_stream_matches_golden(fixture, current, policy, engine):
+    want = fixture["streams"][policy][engine]
+    got = current["streams"][policy][engine]
+    assert got == want, (
+        f"{policy}/{engine} stream drifted from tests/golden/streams.json — "
+        "if intentional, regenerate via python tests/golden/regen.py"
+    )
+
+
+def test_golden_streams_are_exactly_once(fixture):
+    n = fixture["config"]["n"]
+    for policy, per_engine in fixture["streams"].items():
+        for engine, per_node in per_engine.items():
+            flat = sorted(x for node in per_node for x in node)
+            assert flat == list(range(n)), (policy, engine)

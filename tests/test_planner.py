@@ -17,12 +17,10 @@ the per-step StepIO counters, and the end-of-epoch NodeStats.
 import numpy as np
 import pytest
 
-from repro.core import (
-    ChunkingPlan,
-    Cluster,
-    EpochPlanner,
-    EpochSampler,
-)
+# The elastic differential harness owns the equivalence helpers; this file
+# reuses them (make/assert_same_epoch) and keeps the plan-vs-execute grid.
+from elastic_harness import assert_same_epoch, make
+from repro.core import Cluster, EpochPlanner, EpochSampler
 from repro.core.planner import PlanRecorder
 
 pytestmark = pytest.mark.planner
@@ -34,33 +32,6 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:  # property tests become a no-op; the grid below remains
     HAVE_HYPOTHESIS = False
-
-
-def make(n=960, c=8, slots=64, nodes=3, seed=0, sizes=None, **kw):
-    if sizes is None:
-        sizes = np.full(n, 100, dtype=np.int64)
-    plan = ChunkingPlan.create(sizes, c, num_slots=slots, seed=seed)
-    cluster = Cluster(plan, nodes, seed=seed, **kw)
-    sampler = EpochSampler(n, nodes, seed=seed + 99)
-    return cluster, sampler
-
-
-def assert_same_epoch(res_a, res_b, rec_a=None, rec_b=None):
-    for a, b in zip(res_a.returned, res_b.returned):
-        np.testing.assert_array_equal(a, b)
-    assert res_a.per_node_step_io == res_b.per_node_step_io
-    assert res_a.node_stats == res_b.node_stats
-    if rec_a is not None and rec_b is not None:
-        assert rec_a.load_chunk == rec_b.load_chunk
-        assert rec_a.load_owner == rec_b.load_owner
-        assert rec_a.load_step == rec_b.load_step
-        assert rec_a.load_fill_rate == rec_b.load_fill_rate
-        for fa, fb in zip(rec_a.load_files, rec_b.load_files):
-            np.testing.assert_array_equal(fa, fb)
-        assert rec_a.ship_file == rec_b.ship_file
-        assert rec_a.ship_loc == rec_b.ship_loc
-        assert rec_a.ship_src == rec_b.ship_src
-        assert rec_a.ship_dst == rec_b.ship_dst
 
 
 def run_three_ways(make_kwargs, batch, epoch=0, failures=None):

@@ -12,11 +12,12 @@ The service contract under test:
   byte-identical to its solo run, and the shared cache drains.
 """
 
-import dataclasses
-
 import numpy as np
 import pytest
 
+# Comparison helpers come from the elastic differential harness (the
+# template for all equivalence tests — see tests/elastic_harness.py).
+from elastic_harness import assert_node_stats_equal, io_key
 from repro.core import ChunkStore, Cluster, EpochSampler, ParallelBackend, RedoxLoader
 from repro.core.planner import PlanRecorder
 from repro.data import SyntheticTokenDataset
@@ -57,18 +58,7 @@ def assert_io_equal(a, b):
     """StepIO dicts equal on every exact counter (read_wait_s is measured)."""
     assert a.keys() == b.keys()
     for r in a:
-        for f in ("chunk_loads", "disk_bytes", "file_reads", "net_messages",
-                  "net_bytes"):
-            assert getattr(a[r], f) == getattr(b[r], f), (r, f)
-
-
-def assert_node_stats_equal(a, b):
-    skip = ("read_wait_s", "peak_inflight_reads")
-    for na, nb in zip(a, b):
-        for f in dataclasses.fields(type(na)):
-            if f.name in skip:
-                continue
-            assert getattr(na, f.name) == getattr(nb, f.name), f.name
+        assert io_key(a[r]) == io_key(b[r]), r
 
 
 class TestSingleSessionEquivalence:
@@ -391,3 +381,137 @@ class TestServiceFaultTolerance:
                 svc.close_session("j1")
         assert seen > 0
         assert svc.residency.cache_bytes == 0
+
+
+@pytest.mark.elastic
+class TestServiceSuspendResume:
+    """The whole service — all sessions + residency claims — suspends to
+    files and resumes in a fresh process with byte-identical pump output
+    (elastic harness contract applied at the service layer)."""
+
+    @pytest.mark.parametrize("engines", [
+        ("replay", "replay"), ("step", "replay"), ("per_access", "step"),
+    ])
+    def test_resumed_pump_byte_identical(self, tmp_path, engines):
+        def open_svc(name):
+            store = build_store(tmp_path, name)
+            svc = DataService(store)
+            for j, eng in enumerate(engines):
+                svc.open_session(
+                    f"job{j}", seed=2 + 10 * j, batch_per_node=16,
+                    seq_len=32, engine=eng,
+                )
+            return store, svc
+
+        store, svc = open_svc("a")
+        ref = [(j, b["step"], b["returned"].copy()) for j, b in svc.co_epoch(0)]
+        svc.close()
+        store.close()
+
+        store, svc = open_svc("b")
+        got = []
+        pump = svc.co_epoch(0)
+        for j, b in pump:
+            got.append((j, b["step"], b["returned"].copy()))
+            if len(got) == 5:  # mid-round: job0 is one step ahead of job1
+                break
+        pump.close()
+        ck = tmp_path / "svc_ck"
+        svc.suspend(ck)
+        svc.close()
+        store.close()
+
+        store = ChunkStore.open(tmp_path / "b")  # fresh process: files only
+        svc2 = DataService.resume(ck, store)
+        got += [(j, b["step"], b["returned"].copy()) for j, b in svc2.co_epoch(0)]
+        # resumed claims were exactly the remaining reads: drained to zero
+        assert not svc2.residency.has_claims()
+        assert svc2.residency.cache_bytes == 0
+        svc2.close()
+        store.close()
+
+        assert [(j, s) for j, s, _ in ref] == [(j, s) for j, s, _ in got]
+        for (_, _, ra), (_, _, rb) in zip(ref, got):
+            np.testing.assert_array_equal(ra, rb)
+
+    def test_suspend_before_every_session_pumped(self, tmp_path):
+        """Regression: suspending after the pump served only the first
+        session must checkpoint the never-advanced ones too (at their
+        step-0 / resume cursor), not crash on a missing progress cursor."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        for j, eng in enumerate(("replay", "step")):
+            svc.open_session(
+                f"job{j}", seed=2 + 10 * j, batch_per_node=16, seq_len=32,
+                engine=eng,
+            )
+        ref_store = build_store(tmp_path, "ref")
+        ref_svc = DataService(ref_store)
+        for j, eng in enumerate(("replay", "step")):
+            ref_svc.open_session(
+                f"job{j}", seed=2 + 10 * j, batch_per_node=16, seq_len=32,
+                engine=eng,
+            )
+        ref = [(j, b["step"], b["returned"].copy()) for j, b in ref_svc.co_epoch(0)]
+        ref_svc.close()
+        ref_store.close()
+
+        pump = svc.co_epoch(0)
+        got = [next(pump)]  # only job0 ever pumped
+        got = [(j, b["step"], b["returned"].copy()) for j, b in got]
+        pump.close()
+        svc.suspend(tmp_path / "ck")
+        svc.close()
+        store.close()
+
+        store = ChunkStore.open(tmp_path / "chunks")
+        svc2 = DataService.resume(tmp_path / "ck", store)
+        got += [(j, b["step"], b["returned"].copy()) for j, b in svc2.co_epoch(0)]
+        svc2.close()
+        store.close()
+        assert [(j, s) for j, s, _ in ref] == [(j, s) for j, s, _ in got]
+        for (_, _, ra), (_, _, rb) in zip(ref, got):
+            np.testing.assert_array_equal(ra, rb)
+
+    def test_co_refill_replay_suspend_refused(self, tmp_path):
+        """A co_refill service with replay sessions must refuse to suspend
+        (derived snapshots would diverge from the jointly-planned prefix)."""
+        store = build_store(tmp_path)
+        svc = DataService(store, co_refill=True)
+        for j in range(2):
+            svc.open_session(f"job{j}", seed=2 + j, batch_per_node=16, seq_len=32)
+        pump = svc.co_epoch(0)
+        next(pump)
+        pump.close()
+        with pytest.raises(NotImplementedError, match="co_refill"):
+            svc.suspend(tmp_path / "ck")
+        svc.close()
+        store.close()
+
+    def test_resumed_sessions_share_remaining_bytes(self, tmp_path):
+        """Two resumed replay jobs with the same access pattern still dedup
+        their *remaining* reads through the shared residency."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        for j in range(2):
+            svc.open_session(
+                f"job{j}", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32
+            )
+        pump = svc.co_epoch(0)
+        for i, _ in enumerate(pump):
+            if i == 3:
+                break
+        pump.close()
+        ck = tmp_path / "ck"
+        svc.suspend(ck)
+        svc.close()
+        store.close()
+
+        store = ChunkStore.open(tmp_path / "chunks")
+        svc2 = DataService.resume(ck, store)
+        for _ in svc2.co_epoch(0):
+            pass
+        agg = svc2.aggregate_stats()
+        assert agg.shared_hits > 0  # identical-pattern jobs kept sharing
+        svc2.close()
+        store.close()
