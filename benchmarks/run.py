@@ -36,6 +36,7 @@ def main() -> None:
         overall,
         planner_speed,
         roofline_report,
+        service_transport,
     )
 
     csv_rows: list[tuple] = []
@@ -82,6 +83,11 @@ def main() -> None:
         "Multi-job data service: shared-cache aggregate throughput",
         lambda: multi_job.main(quick=args.quick),
         key="multi_job",
+    )
+    section(
+        "Out-of-process transport: ring throughput + batch latency",
+        lambda: service_transport.main(quick=args.quick),
+        key="transport",
     )
     section("Figs 9-11: overall speedups", overall_section, key="overall")
     section("Tables 4+5: ablation breakdown", breakdown.main)

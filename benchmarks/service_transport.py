@@ -1,0 +1,165 @@
+"""Out-of-process transport overhead: K trainers on one served data plane.
+
+The tentpole claim of the transport subsystem (DESIGN.md §11) is that
+moving the data plane out of the trainer's process costs latency, not
+correctness — batches cross a process boundary through a shared-memory
+ring instead of a Python queue. This benchmark puts a number on that
+cost: one :class:`~repro.service.transport.DataServiceServer` on a real
+unix socket, K :class:`~repro.service.transport.RedoxClient` consumers
+(threads here, so one process hosts the timer — the wire format and ring
+protocol are identical for separate processes), each draining a full
+epoch. Reported per row:
+
+* ``agg_mb_s`` — aggregate payload bytes through the rings / wall time;
+* ``p50_ms``/``p99_ms`` — per-batch client-side latency (time blocked in
+  ``ring.read`` + decode until the next GlobalBatch is ready);
+* ``fairness`` — slowest client wall / fastest client wall over the same
+  step count (the round-robin pump should keep this near 1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import SessionSpec
+from repro.data import SyntheticTokenDataset
+from repro.service import DataService
+from repro.service.transport import DataServiceServer, RedoxClient
+
+
+def _build_store(root: Path, *, num_docs: int, chunk_size: int, groups: int,
+                 mean_len: int, seed: int):
+    ds = SyntheticTokenDataset(num_docs, vocab_size=32000, mean_len=mean_len, seed=seed)
+    return ds.build_store(
+        root, chunk_size, num_slots=groups * chunk_size, seed=seed + 1
+    )
+
+
+def _percentile(sorted_vals: "list[float]", q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[i]
+
+
+def run_transport(
+    clients: int = 3,
+    *,
+    num_docs: int = 512,
+    chunk_size: int = 8,
+    groups: int = 8,
+    mean_len: int = 64,
+    batch: int = 16,
+    seq_len: int = 64,
+    epochs: int = 1,
+    seed: int = 0,
+) -> dict:
+    """K clients drain ``epochs`` epochs over the real socket+ring path.
+    Returns one BENCH row."""
+    with tempfile.TemporaryDirectory(prefix="redox_transport_") as tmp:
+        root = Path(tmp) / "chunks"
+        store = _build_store(root, num_docs=num_docs, chunk_size=chunk_size,
+                             groups=groups, mean_len=mean_len, seed=seed)
+        sock = Path(tmp) / "svc.sock"
+        svc = DataService(store, co_refill=True)
+        per_client: "list[dict]" = [None] * clients  # type: ignore[list-item]
+
+        def worker(j: int) -> None:
+            spec = SessionSpec(seed=seed + 10 * j + 1, batch_per_node=batch,
+                               seq_len=seq_len)
+            client = RedoxClient(sock, spec, job_id=f"job{j}",
+                                 heartbeat_interval=0)
+            lat: "list[float]" = []
+            nbytes = steps = 0
+            t0 = time.perf_counter()
+            try:
+                for epoch in range(epochs):
+                    it = client.epoch(epoch)
+                    while True:
+                        t = time.perf_counter()
+                        try:
+                            b = next(it)
+                        except StopIteration:
+                            break
+                        lat.append(time.perf_counter() - t)
+                        steps += 1
+                        nbytes += (b["tokens"].nbytes + b["targets"].nbytes
+                                   + b["loss_mask"].nbytes)
+            finally:
+                client.close()
+            per_client[j] = dict(
+                steps=steps, bytes=nbytes,
+                wall=time.perf_counter() - t0, lat=lat,
+            )
+
+        with DataServiceServer(svc, sock, poll_interval=0.001):
+            threads = [threading.Thread(target=worker, args=(j,))
+                       for j in range(clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+        store.close()
+
+    assert all(c is not None for c in per_client)
+    steps = [c["steps"] for c in per_client]
+    walls = [c["wall"] for c in per_client]
+    lats = sorted(x for c in per_client for x in c["lat"])
+    total_bytes = sum(c["bytes"] for c in per_client)
+    return dict(
+        clients=clients,
+        epochs=epochs,
+        steps=sum(steps),
+        ring_mb=total_bytes / 1e6,
+        agg_mb_s=total_bytes / 1e6 / wall,
+        batches_s=sum(steps) / wall,
+        p50_ms=_percentile(lats, 0.50) * 1e3,
+        p99_ms=_percentile(lats, 0.99) * 1e3,
+        fairness=max(walls) / max(min(walls), 1e-9),
+        wall_s=wall,
+    )
+
+
+def print_table(rows: "list[dict]") -> None:
+    print(
+        f"{'clients':>7s} {'steps':>6s} {'ring_MB':>8s} {'MB/s':>7s} "
+        f"{'batch/s':>8s} {'p50_ms':>7s} {'p99_ms':>7s} {'fair':>6s} "
+        f"{'wall_s':>7s}"
+    )
+    for r in rows:
+        print(
+            f"{r['clients']:7d} {r['steps']:6d} {r['ring_mb']:8.1f} "
+            f"{r['agg_mb_s']:7.1f} {r['batches_s']:8.1f} {r['p50_ms']:7.2f} "
+            f"{r['p99_ms']:7.2f} {r['fairness']:5.2f}x {r['wall_s']:7.2f}"
+        )
+
+
+def main(quick: bool = False) -> "list[dict]":
+    kw = dict(num_docs=256, mean_len=48) if quick else {}
+    rows = [run_transport(1, **kw), run_transport(3, **kw)]
+    if not quick:
+        rows.append(run_transport(5))
+    print_table(rows)
+    for r in rows:
+        # Every client must see the full epoch stream — the pump serves
+        # sessions round-robin, so steps divide evenly by construction.
+        assert r["steps"] % r["clients"] == 0, r
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.clients == 3 and args.epochs == 1:
+        main(quick=args.quick)
+    else:
+        print_table([run_transport(args.clients, epochs=args.epochs)])

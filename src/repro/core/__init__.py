@@ -9,6 +9,7 @@ from .loader import RedoxLoader
 from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
+from .spec import SessionSpec
 from .stats import NodeStats, PipelineTimeModel, PlannerStats, ServiceStats, StepIO
 from .storage import (
     BACKENDS,
@@ -47,6 +48,7 @@ __all__ = [
     "RequestResult",
     "run_baseline_epoch",
     "ServiceStats",
+    "SessionSpec",
     "StepIO",
     "StorageBackend",
     "VFSBackend",

@@ -42,9 +42,10 @@ from .distributed import Cluster
 from .elastic import ClusterSnapshot
 from .planner import EpochPlanner
 from .sampler import EpochSampler
+from .spec import SessionSpec
 from .stats import StepIO
 
-__all__ = ["RedoxLoader", "GlobalBatch"]
+__all__ = ["RedoxLoader", "GlobalBatch", "SessionSpec"]
 
 LOADER_MANIFEST = "loader_manifest.json"
 
@@ -109,6 +110,59 @@ class RedoxLoader:
     @property
     def use_planner(self) -> bool:
         return self.engine == "replay"
+
+    @classmethod
+    def from_spec(cls, spec: SessionSpec, store) -> "RedoxLoader":
+        """Build the whole Cluster + EpochSampler + RedoxLoader stack from
+        one :class:`~repro.core.spec.SessionSpec`.
+
+        This is THE session constructor: ``DataService.open_session`` and
+        the transport server both delegate here, so a spec means exactly
+        the same stack everywhere (a single-session service run is
+        byte-identical to ``RedoxLoader.from_spec(spec, store)``).
+        """
+        cluster = Cluster(
+            store.plan,
+            spec.num_nodes,
+            policy=spec.policy,
+            seed=spec.seed,
+            store=store,
+            prefetch=spec.prefetch,
+            prefetch_window=spec.prefetch_window,
+            remote_memory_limit_bytes=spec.remote_memory_limit_bytes,
+        )
+        sampler = EpochSampler(
+            store.plan.num_files, spec.num_nodes, seed=spec.effective_sampler_seed
+        )
+        return cls(
+            cluster,
+            sampler,
+            batch_per_node=spec.batch_per_node,
+            seq_len=spec.seq_len,
+            pad_id=spec.pad_id,
+            queue_depth=spec.queue_depth,
+            engine=spec.engine,
+        )
+
+    @property
+    def spec(self) -> SessionSpec:
+        """The SessionSpec this loader stack embodies (reconstructed from
+        live state, so it is exact for ``from_spec``-built loaders and a
+        best-effort description otherwise)."""
+        return SessionSpec(
+            policy=self.cluster.policy,
+            seed=self.cluster.seed,
+            sampler_seed=self.sampler.seed,
+            num_nodes=self.cluster.num_nodes,
+            batch_per_node=self.batch_per_node,
+            seq_len=self.seq_len,
+            pad_id=self.pad_id,
+            engine=self.engine,
+            prefetch=self.cluster.prefetch,
+            prefetch_window=self.cluster.prefetch_window,
+            remote_memory_limit_bytes=self.cluster._remote_limit,
+            queue_depth=self.queue_depth,
+        )
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
         n = min(len(s) for s in self.sampler.node_sequences(epoch))

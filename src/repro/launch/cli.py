@@ -1,0 +1,88 @@
+"""Shared argparse builders for the launch CLIs.
+
+``train.py`` and ``data_service.py`` grew the same data-plane knobs with
+drifting spellings; these builders define each shared flag ONCE —
+identical option string, type, choices, default, and help — and each
+launcher composes the groups it needs. ``tests/test_transport.py`` pins
+the two parsers to identical spellings for every shared flag.
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from ..core.storage.store import BACKENDS
+
+__all__ = [
+    "RESUME_AUTO",
+    "add_data_plane_args",
+    "add_elastic_args",
+    "resolve_resume_dir",
+]
+
+#: Sentinel for a bare ``--resume-data`` (no directory): the launcher
+#: resolves it to its own default location (train: ``workdir/ckpt/data``);
+#: launchers with no natural default reject it with a usage error.
+RESUME_AUTO = "__auto__"
+
+
+def add_data_plane_args(
+    ap: argparse.ArgumentParser,
+    *,
+    batch: int = 8,
+    seq_len: int = 128,
+    num_docs: int = 1024,
+) -> None:
+    """The session-shaping knobs every data-plane launcher shares.
+
+    Per-launcher defaults differ only where the historical CLIs did
+    (batch/seq-len/num-docs); spelling, type and semantics are identical.
+    """
+    g = ap.add_argument_group("data plane")
+    g.add_argument("--batch", type=int, default=batch,
+                   help="global batch size (records per training step)")
+    g.add_argument("--seq-len", type=int, default=seq_len)
+    g.add_argument("--num-docs", type=int, default=num_docs,
+                   help="synthetic dataset size when building a fresh store")
+    g.add_argument("--vocab-size", type=int, default=None,
+                   help="synthetic vocab (default: launcher-specific)")
+    g.add_argument("--seed", type=int, default=0,
+                   help="base seed; protocol/sampler/dataset seeds derive "
+                        "from it identically in every launcher")
+    g.add_argument("--policy", choices=["max_fill", "random"],
+                   default="max_fill", help="redirection refill policy")
+    g.add_argument("--engine", choices=["replay", "step", "per_access"],
+                   default="replay", help="epoch execution engine")
+    g.add_argument("--backend", choices=sorted(BACKENDS), default=None,
+                   help="storage backend (default: the store's default)")
+
+
+def add_elastic_args(ap: argparse.ArgumentParser) -> None:
+    """Suspend/resume flags (DESIGN.md §10), shared verbatim."""
+    g = ap.add_argument_group("elastic data plane")
+    g.add_argument("--resume-data", type=str, nargs="?", const=RESUME_AUTO,
+                   default=None, metavar="DIR",
+                   help="data-plane suspend/resume directory: resumed from "
+                        "if it holds suspend files, written by "
+                        "--suspend-after; bare --resume-data uses the "
+                        "launcher's default location (if it has one)")
+    g.add_argument("--suspend-after", type=int, default=None, metavar="N",
+                   help="suspend the data plane to --resume-data after N "
+                        "steps and exit (restart with the same flags to "
+                        "continue byte-identically)")
+
+
+def resolve_resume_dir(
+    ap: argparse.ArgumentParser, value, default: "Path | None"
+) -> "Path | None":
+    """Resolve ``--resume-data``'s value: None passes through, a directory
+    is taken literally, and the bare-flag sentinel becomes ``default`` —
+    or a usage error for launchers that have no default location."""
+    if value is None:
+        return None
+    if value != RESUME_AUTO:
+        return Path(value)
+    if default is None:
+        ap.error("--resume-data requires a directory with this launcher")
+    return default

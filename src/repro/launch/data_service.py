@@ -8,6 +8,11 @@ round-robin pump, and reports per-job + aggregate sharing stats: with K
 co-scheduled jobs the bytes actually read from storage stay close to 1x the
 dataset while the protocol-level demand is ~K x (every duplicate chunk read
 is served from the shared residency).
+
+With ``--serve SOCKET`` it instead exposes the service out-of-process:
+trainers in other OS processes open sessions over the unix socket
+(``repro.launch.train --data-server SOCKET``) and batches flow through
+per-session shared-memory rings (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -18,43 +23,46 @@ import tempfile
 import time
 from pathlib import Path
 
-from ..core import ChunkStore
+from ..core import ChunkStore, SessionSpec
 from ..data import SyntheticTokenDataset
 from ..service import DataService
+from ..service.transport import DataServiceServer
+from .cli import add_data_plane_args, add_elastic_args, resolve_resume_dir
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=3)
     ap.add_argument("--epochs", type=int, default=1)
-    ap.add_argument("--num-docs", type=int, default=512)
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--groups", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--engine", choices=["replay", "step", "per_access"],
-                    default="replay")
+    add_data_plane_args(ap, batch=16, seq_len=64, num_docs=512)
     ap.add_argument("--co-refill", action="store_true",
                     help="steer refill tie-breaks toward shareable chunks")
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="shared residency cap in MB (default: unbounded)")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--store-dir", type=Path, default=None,
                     help="reuse/build the chunk store here instead of a tmpdir")
-    ap.add_argument("--resume-data", type=Path, default=None, metavar="DIR",
-                    help="service suspend/resume directory: an existing "
-                         "service_manifest.json there is resumed mid-epoch; "
-                         "--suspend-after writes one")
-    ap.add_argument("--suspend-after", type=int, default=None, metavar="N",
-                    help="suspend all sessions to --resume-data after N pump "
-                         "steps and exit (restart with the same flags to "
-                         "continue byte-identically)")
+    add_elastic_args(ap)
+    ap.add_argument("--serve", metavar="SOCKET", default=None,
+                    help="serve sessions out-of-process on this unix socket "
+                         "instead of pumping local jobs (trainers connect "
+                         "with repro.launch.train --data-server SOCKET)")
+    return ap
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
     args = ap.parse_args(argv)
-    if args.suspend_after is not None and args.resume_data is None:
+    resume_dir = resolve_resume_dir(ap, args.resume_data, None)
+    if args.suspend_after is not None and resume_dir is None:
         ap.error("--suspend-after requires --resume-data DIR")
-    if args.resume_data is not None and args.store_dir is None:
+    if resume_dir is not None and args.store_dir is None:
         ap.error("--resume-data requires --store-dir (the snapshot references "
                  "the persistent chunk store)")
+    if args.serve is not None and args.suspend_after is not None:
+        ap.error("--suspend-after is driven over the socket when serving "
+                 "(RedoxClient.suspend)")
 
     with contextlib.ExitStack() as stack:
         if args.store_dir is None:
@@ -66,37 +74,51 @@ def main(argv=None) -> int:
             root = args.store_dir
         if not (root / "plan.npz").exists():
             ds = SyntheticTokenDataset(
-                args.num_docs, vocab_size=32000, mean_len=args.seq_len,
-                seed=args.seed + 5,
+                args.num_docs, vocab_size=args.vocab_size or 32000,
+                mean_len=args.seq_len, seed=args.seed + 5,
             )
             ds.build_store(
                 root, args.chunk_size,
                 num_slots=args.groups * args.chunk_size, seed=args.seed,
             )
-        store = ChunkStore.open(root)
+        store = ChunkStore.open(root, backend=args.backend or "vfs")
         limit = int(args.cache_mb * 1e6) if args.cache_mb else None
         resuming = (
-            args.resume_data is not None
-            and (args.resume_data / "service_manifest.json").exists()
+            resume_dir is not None
+            and (resume_dir / "service_manifest.json").exists()
         )
         if resuming:
-            svc = DataService.resume(args.resume_data, store)
+            svc = DataService.resume(resume_dir, store)
             start_epoch = min(
                 s.loader.resume_point[0] for s in svc.sessions
                 if s.loader.resume_point is not None
             )
             print(f"resumed {len(svc.sessions)} session(s) mid-epoch "
-                  f"{start_epoch} from {args.resume_data}")
+                  f"{start_epoch} from {resume_dir}")
         else:
             svc = DataService(store, cache_limit_bytes=limit,
                               co_refill=args.co_refill)
+            start_epoch = 0
+
+        if args.serve is not None:
+            # Serve mode: sessions come from the clients (or the resumed
+            # snapshot), not from --jobs.
+            with DataServiceServer(svc, args.serve) as server:
+                print(f"serving on {args.serve} "
+                      f"({len(svc.sessions)} resumed session(s), "
+                      f"ctrl-c to stop)", flush=True)
+                with contextlib.suppress(KeyboardInterrupt):
+                    server.serve_forever()
+            store.close()
+            return 0
+
+        if not resuming:
             for j in range(args.jobs):
-                svc.open_session(
-                    f"job{j}", seed=args.seed + 10 * j + 1,
+                svc.open_session(f"job{j}", SessionSpec(
+                    policy=args.policy, seed=args.seed + 10 * j + 1,
                     batch_per_node=args.batch, seq_len=args.seq_len,
                     engine=args.engine,
-                )
-            start_epoch = 0
+                ))
         steps = {s.job_id: 0 for s in svc.sessions}
         demand = 0
         pumped = 0
@@ -112,7 +134,7 @@ def main(argv=None) -> int:
                     break
             if suspended:
                 pump.close()
-                out = svc.suspend(args.resume_data)
+                out = svc.suspend(resume_dir)
                 print(f"suspended after {pumped} pump step(s) -> {out}; "
                       f"rerun with the same flags to continue")
                 break

@@ -6,6 +6,10 @@ data always flows through the real Redox chunk store + redirection
 protocol. Checkpoints/restart and the async loader are on by default.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --steps 50
+
+With ``--data-server SOCKET`` the trainer owns no data plane at all: it
+opens a session on a running ``repro.launch.data_service --serve`` process
+and consumes batches from the shared-memory ring (DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -20,32 +24,46 @@ import jax.numpy as jnp
 
 from ..checkpoint.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..configs import RunConfig, get_config, list_archs, reduced
-from ..core import Cluster, EpochSampler, RedoxLoader
+from ..core import ChunkStore, RedoxLoader, SessionSpec
 from ..data import SyntheticTokenDataset
 from ..models import build_model
 from ..optim.optimizers import make_optimizer
+from ..service.transport import RedoxClient
 from ..train.train_step import build_train_step, init_train_state
+from .cli import add_data_plane_args, add_elastic_args, resolve_resume_dir
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--nodes", type=int, default=2)
-    ap.add_argument("--num-docs", type=int, default=1024)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--remat", default="dots")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--full", action="store_true", help="full-size config (real HW)")
-    ap.add_argument("--resume-data", action="store_true",
-                    help="checkpoint/restore the DATA PLANE alongside model "
-                         "state: each model checkpoint also writes a mid-epoch "
-                         "loader snapshot (ckpt/data), and a restart resumes "
-                         "the batch stream byte-identically mid-epoch")
+    add_data_plane_args(ap, batch=8, seq_len=128, num_docs=1024)
+    add_elastic_args(ap)
+    ap.add_argument("--data-server", metavar="SOCKET", default=None,
+                    help="consume batches from a repro.launch.data_service "
+                         "--serve process at this unix socket instead of "
+                         "building a local data plane")
+    ap.add_argument("--job-id", default="train0",
+                    help="session id on the data server (--data-server only)")
+    return ap
+
+
+def main() -> int:
+    ap = build_parser()
     args = ap.parse_args()
+    if args.data_server is not None and args.resume_data is not None:
+        ap.error("--resume-data belongs to the server with --data-server "
+                 "(run data_service --resume-data there)")
+    if args.data_server is not None and args.suspend_after is not None:
+        ap.error("--suspend-after belongs to the server with --data-server")
+    if args.suspend_after is not None and args.resume_data is None:
+        ap.error("--suspend-after requires --resume-data")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -58,22 +76,38 @@ def main() -> int:
     print(f"arch={args.arch} family={cfg.family} params={cfg.param_count():,d}")
 
     workdir = Path(args.workdir or tempfile.mkdtemp(prefix=f"redox_{args.arch}_"))
-    ds = SyntheticTokenDataset(args.num_docs, cfg.vocab_size,
-                               mean_len=args.seq_len // 2, seed=5)
-    store = ds.build_store(workdir / "chunks", chunk_size=16,
-                           memory_bytes=int(ds.sizes_bytes.sum() // 4), seed=1)
-    data_ck = workdir / "ckpt" / "data"
-    if args.resume_data and (data_ck / "loader_manifest.json").exists():
-        loader = RedoxLoader.resume(data_ck, store)
-        print(f"data plane resumed at epoch {loader.resume_point[0]} "
-              f"step {loader.resume_point[1]}")
+    # Seeds derive from --seed exactly as in data_service.py: protocol
+    # +2, sampler +3, dataset +5 (the historical constants at seed 0).
+    spec = SessionSpec(
+        policy=args.policy,
+        seed=args.seed + 2,
+        sampler_seed=args.seed + 3,
+        num_nodes=args.nodes,
+        batch_per_node=max(args.batch // args.nodes, 1),
+        seq_len=args.seq_len,
+        engine=args.engine,
+        remote_memory_limit_bytes=1_000_000,
+    )
+    data_dir = resolve_resume_dir(ap, args.resume_data, workdir / "ckpt" / "data")
+    store = None
+    if args.data_server is not None:
+        loader = RedoxClient(args.data_server, spec, job_id=args.job_id)
+        print(f"data plane: {args.data_server} (job {args.job_id})")
     else:
-        cluster = Cluster(store.plan, args.nodes, store=store, seed=2,
-                          remote_memory_limit_bytes=1_000_000)
-        sampler = EpochSampler(args.num_docs, args.nodes, seed=3)
-        loader = RedoxLoader(cluster, sampler,
-                             batch_per_node=max(args.batch // args.nodes, 1),
-                             seq_len=args.seq_len)
+        ds = SyntheticTokenDataset(args.num_docs, args.vocab_size or cfg.vocab_size,
+                                   mean_len=args.seq_len // 2, seed=args.seed + 5)
+        store = ds.build_store(workdir / "chunks", chunk_size=16,
+                               memory_bytes=int(ds.sizes_bytes.sum() // 4),
+                               seed=args.seed + 1)
+        if args.backend is not None:
+            store.close()
+            store = ChunkStore.open(workdir / "chunks", backend=args.backend)
+        if data_dir is not None and (data_dir / "loader_manifest.json").exists():
+            loader = RedoxLoader.resume(data_dir, store)
+            print(f"data plane resumed at epoch {loader.resume_point[0]} "
+                  f"step {loader.resume_point[1]}")
+        else:
+            loader = RedoxLoader.from_spec(spec, store)
     ckpt = AsyncCheckpointer(workdir / "ckpt")
     start = latest_step(workdir / "ckpt")
     if start:
@@ -85,8 +119,10 @@ def main() -> int:
               "projected through the frontend stub (see launch/specs.py)")
 
     step = int(start or 0)
+    run_steps = 0
+    suspended = False
     epoch, t0 = (loader.resume_point or (0, 0))[0], time.time()
-    while step < args.steps:
+    while step < args.steps and not suspended:
         for batch in loader.epoch_async(epoch):
             if step >= args.steps:
                 break
@@ -117,18 +153,32 @@ def main() -> int:
                 )
             state, metrics = step_fn(state, feed)
             step += 1
+            run_steps += 1
             if step % 10 == 0 or step == 1:
                 print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
                       f"({(time.time()-t0)/step:.2f}s/step)")
             if step % args.ckpt_every == 0:
                 ckpt.save(step, state)
-                if args.resume_data:
+                if data_dir is not None:
                     # Replay-engine suspend is derived (shadow simulation),
                     # so the stream keeps flowing while this writes.
-                    loader.suspend(data_ck)
+                    loader.suspend(data_dir)
+            if args.suspend_after is not None and run_steps >= args.suspend_after:
+                ckpt.save(step, state)
+                loader.suspend(data_dir)
+                suspended = True
+                break
         epoch += 1
     ckpt.wait()
-    print(f"done: {step} steps in {time.time()-t0:.0f}s; workdir={workdir}")
+    if args.data_server is not None:
+        loader.close()
+    if store is not None:
+        store.close()
+    if suspended:
+        print(f"suspended after {run_steps} step(s) -> {data_dir}; "
+              f"rerun with the same flags to continue")
+    else:
+        print(f"done: {step} steps in {time.time()-t0:.0f}s; workdir={workdir}")
     return 0
 
 

@@ -48,10 +48,9 @@ from pathlib import Path
 
 import numpy as np
 
-from ..core.distributed import Cluster
 from ..core.loader import RedoxLoader
 from ..core.planner import EpochPlan, EpochPlanner, PlanRecorder
-from ..core.sampler import EpochSampler
+from ..core.spec import SessionSpec
 from ..core.stats import ServiceStats
 from ..core.storage import first_read_order, merge_read_schedules
 from .residency import SharedResidency, session_still_needs
@@ -117,6 +116,11 @@ class JobSession:
     @property
     def engine(self) -> str:
         return self.loader.engine
+
+    @property
+    def spec(self) -> SessionSpec:
+        """The SessionSpec describing this session's loader stack."""
+        return self.loader.spec
 
     @property
     def last_plan(self):
@@ -222,34 +226,36 @@ class DataService:
     def open_session(
         self,
         job_id,
+        spec: "SessionSpec | None" = None,
         *,
-        policy: str = "max_fill",
-        seed: int = 0,
-        sampler_seed: "int | None" = None,
-        num_nodes: int = 1,
-        batch_per_node: int = 8,
-        seq_len: int = 128,
-        pad_id: int = 0,
-        engine: str = "replay",
-        prefetch: bool = True,
-        prefetch_window: int = 64,
-        remote_memory_limit_bytes: int = 1 << 62,
-        queue_depth: int = 2,
         resume_from: "str | Path | None" = None,
+        **kwargs,
     ) -> JobSession:
         """Open a job session with its own protocol state and RNG stream.
 
-        ``seed``/``policy``/``sampler_seed`` mean exactly what they mean for
-        a standalone ``Cluster`` + ``EpochSampler`` + ``RedoxLoader`` stack —
-        a single-session service run is byte-identical to that solo run
-        (``tests/test_service.py``).
+        ``spec`` is the :class:`~repro.core.spec.SessionSpec` describing the
+        session — the same object a standalone
+        ``RedoxLoader.from_spec(spec, store)`` accepts and the transport
+        wire protocol carries; a single-session service run is
+        byte-identical to that solo run (``tests/test_service.py``).
+
+        The legacy keyword spelling (``policy=``, ``seed=``,
+        ``batch_per_node=``, ... plus the ``use_planner`` alias) is kept as
+        a deprecation shim: keywords are folded into a SessionSpec via
+        :meth:`SessionSpec.from_kwargs`.
 
         ``resume_from`` re-opens a session suspended by
         :meth:`DataService.suspend`: the cluster is restored from the saved
-        snapshot (every other protocol argument is taken from the files, not
-        the keyword defaults) and the session's next epoch continues at the
-        saved step.
+        snapshot (every protocol argument is taken from the files, not from
+        ``spec``) and the session's next epoch continues at the saved step.
         """
+        if spec is None:
+            spec = SessionSpec.from_kwargs(**kwargs)  # deprecation shim
+        elif kwargs:
+            raise TypeError(
+                "pass either a SessionSpec or the legacy keyword form, not "
+                f"both (got spec and {sorted(kwargs)})"
+            )
         with self._lock:
             if job_id in self._sessions:
                 raise ValueError(f"job {job_id!r} already has an open session")
@@ -257,33 +263,11 @@ class DataService:
             # Same restore path as a standalone loader — only the store
             # differs (reads route through the shared residency).
             loader = RedoxLoader.resume(resume_from, _SessionStore(self, job_id))
-            cluster, sampler = loader.cluster, loader.sampler
         else:
-            cluster = Cluster(
-                self.plan,
-                num_nodes,
-                policy=policy,
-                seed=seed,
-                store=_SessionStore(self, job_id),
-                prefetch=prefetch,
-                prefetch_window=prefetch_window,
-                remote_memory_limit_bytes=remote_memory_limit_bytes,
-            )
-            sampler = EpochSampler(
-                self.plan.num_files,
-                num_nodes,
-                seed=seed + 1 if sampler_seed is None else sampler_seed,
-            )
-            loader = RedoxLoader(
-                cluster,
-                sampler,
-                batch_per_node=batch_per_node,
-                seq_len=seq_len,
-                pad_id=pad_id,
-                queue_depth=queue_depth,
-                engine=engine,
-            )
-        session = JobSession(self, job_id, cluster, sampler, loader)
+            loader = RedoxLoader.from_spec(spec, _SessionStore(self, job_id))
+        session = JobSession(
+            self, job_id, loader.cluster, loader.sampler, loader
+        )
         if self.co_refill:
             self._install_refill_filter(session)
         with self._lock:
@@ -320,9 +304,18 @@ class DataService:
         return [s for s in self._sessions.values() if not s.closed]
 
     def session(self, job_id) -> JobSession:
-        return self._sessions[job_id]
+        try:
+            return self._sessions[job_id]
+        except KeyError:
+            raise KeyError(
+                f"no open session for job {job_id!r} (open sessions: "
+                f"{sorted(map(repr, self._sessions)) or 'none'}); "
+                "open_session() it first — a closed job's id is reusable"
+            ) from None
 
     def close(self) -> None:
+        """Close every session. Idempotent: a second close() (or a close()
+        racing individual close_session calls) is a no-op."""
         for job_id in list(self._sessions):
             self.close_session(job_id)
         self.residency.end_epoch()
@@ -604,7 +597,16 @@ class DataService:
         )
 
     # -------------------------------------------------------------- serving
-    def co_epoch(self, epoch: int):
+    def co_epoch(
+        self,
+        epoch: int,
+        *,
+        ready=None,
+        admit=None,
+        idle=None,
+        on_done=None,
+        raw: bool = False,
+    ):
         """THE shared serving loop: round-robin pump over all open sessions.
 
         Yields ``(job_id, GlobalBatch)``; each session advances one training
@@ -617,43 +619,103 @@ class DataService:
         some sessions one step ahead, so the resumed pump serves the lagging
         sessions first — the combined (job, step) stream continues exactly
         where the suspended one stopped.
+
+        The transport server hooks (all default-off; in-process behaviour is
+        unchanged without them):
+
+        * ``ready(session) -> bool`` — per-session backpressure: a session
+          that is not ready (its shared-memory ring is full) is *skipped*
+          this round instead of served; its cursor does not advance, so
+          lockstep degrades gracefully and snaps back once it drains.
+          Per-job streams stay exact under skipping — sharing rides the
+          planned claim refcounts, not the serving order (only backend
+          schedule hit-rate can degrade). Pass ``idle`` too: a round where
+          no session is ready calls ``idle()`` (sleep / abort check)
+          instead of busy-spinning.
+        * ``admit() -> iterable[JobSession]`` — dynamic membership: called
+          each round; returned sessions not yet in the pump join it
+          mid-epoch (planned on entry, claims installed, cursor-aware for
+          resumed sessions). When ``admit`` is given the pump STARTS EMPTY
+          and ends once every admitted session finished and ``admit``
+          returns nothing new.
+        * ``on_done(session)`` — fires when a session's epoch completes
+          (the server writes its end-of-epoch sentinel there).
+        * ``raw=True`` — yield ``(session, (payloads, step, io, returned))``
+          instead of assembled batches (the server encodes frames straight
+          from the raw step, so token bytes are copied once into the ring).
         """
-        sessions = self.sessions
-        if any(s.engine == "replay" for s in sessions):
-            self.plan_epoch(epoch)  # cached plans reused; claims reinstalled
-        gens = {s.job_id: s._produce_guarded(epoch) for s in sessions}
-        cursors = {
-            s.job_id: (
+        gens, cursors = {}, {}
+        live: "list[JobSession]" = []
+
+        def _attach(s):
+            gens[s.job_id] = s._produce_guarded(epoch)
+            cursors[s.job_id] = (
                 s.loader._resume["start_step"]
                 if s.loader._resume is not None
                 and s.loader._resume["epoch"] == epoch
                 else 0
             )
-            for s in sessions
-        }
-        for s in sessions:
             # Pin every loader's suspend cursor up front: a pump abandoned
             # before reaching some session must still be able to suspend it
             # (at the point it would have continued from).
             s.loader._progress = (epoch, cursors[s.job_id])
-        live = list(sessions)
+            live.append(s)
+
+        def _admit():
+            fresh = [
+                s for s in admit()
+                if s.job_id not in gens and not s.closed
+            ]
+            if any(s.engine == "replay" for s in fresh):
+                # plan_epoch only fills sessions without a cached plan, so
+                # late joiners plan without disturbing running sessions.
+                self.plan_epoch(epoch)
+            for s in fresh:
+                _attach(s)
+
+        if admit is None:
+            sessions = self.sessions
+            if any(s.engine == "replay" for s in sessions):
+                self.plan_epoch(epoch)  # cached plans reused; claims reinstalled
+            for s in sessions:
+                _attach(s)
         try:
-            while live:
-                round_ = min(cursors[s.job_id] for s in live)
+            while True:
+                if admit is not None:
+                    _admit()
+                for s in list(live):  # detach sessions closed between rounds
+                    if s.closed:
+                        live.remove(s)
+                        gens[s.job_id].close()
+                if not live:
+                    break
+                candidates = (
+                    live if ready is None else [s for s in live if ready(s)]
+                )
+                if not candidates:
+                    if idle is not None:
+                        idle()
+                    continue
+                round_ = min(cursors[s.job_id] for s in candidates)
                 for s in list(live):
                     if s.closed:
                         live.remove(s)
                         gens[s.job_id].close()
                         continue
-                    if cursors[s.job_id] != round_:
+                    if s not in candidates or cursors[s.job_id] != round_:
                         continue
                     try:
                         item = next(gens[s.job_id])
                     except StopIteration:
                         live.remove(s)
+                        if on_done is not None:
+                            on_done(s)
                         continue
                     cursors[s.job_id] = int(item[1]) + 1
-                    yield s.job_id, s.loader._assemble(*item)
+                    if raw:
+                        yield s, item
+                    else:
+                        yield s.job_id, s.loader._assemble(*item)
         finally:
             for s in live:  # consumer abandoned the pump mid-epoch
                 gens[s.job_id].close()

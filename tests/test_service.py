@@ -515,3 +515,171 @@ class TestServiceSuspendResume:
         assert agg.shared_hits > 0  # identical-pattern jobs kept sharing
         svc2.close()
         store.close()
+
+
+class TestSessionSpecAPI:
+    """SessionSpec is THE session-describing object; the legacy kwarg
+    spelling (and the use_planner alias) are deprecation shims that must
+    build byte-identical sessions."""
+
+    SPEC = None  # set in _specs
+
+    def _returned(self, tmp_path, name, open_with):
+        store = build_store(tmp_path, name)
+        svc = DataService(store)
+        session = open_with(svc)
+        out = [b["returned"].copy() for b in session.epoch(0)]
+        svc.close()
+        store.close()
+        return out
+
+    def test_spec_equals_kwargs_equals_use_planner(self, tmp_path):
+        from repro.core import SessionSpec
+
+        spec = SessionSpec(seed=2, sampler_seed=4, batch_per_node=16, seq_len=32)
+        via_spec = self._returned(
+            tmp_path, "a", lambda svc: svc.open_session("j", spec)
+        )
+        via_kwargs = self._returned(
+            tmp_path, "b",
+            lambda svc: svc.open_session(
+                "j", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32,
+                engine="replay",
+            ),
+        )
+        via_alias = self._returned(
+            tmp_path, "c",
+            lambda svc: svc.open_session(
+                "j", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32,
+                use_planner=True,
+            ),
+        )
+        assert len(via_spec) == len(via_kwargs) == len(via_alias)
+        for a, b, c in zip(via_spec, via_kwargs, via_alias):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+
+    def test_use_planner_false_is_step_engine(self, tmp_path):
+        from repro.core import SessionSpec
+
+        via_alias = self._returned(
+            tmp_path, "a",
+            lambda svc: svc.open_session(
+                "j", seed=2, sampler_seed=4, batch_per_node=16, seq_len=32,
+                use_planner=False,
+            ),
+        )
+        via_spec = self._returned(
+            tmp_path, "b",
+            lambda svc: svc.open_session(
+                "j",
+                SessionSpec(seed=2, sampler_seed=4, batch_per_node=16,
+                            seq_len=32, engine="step"),
+            ),
+        )
+        for a, b in zip(via_alias, via_spec):
+            np.testing.assert_array_equal(a, b)
+
+    def test_loader_from_spec_matches_manual_stack(self, tmp_path):
+        """RedoxLoader.from_spec == hand-built Cluster/EpochSampler/loader,
+        and loader.spec round-trips what from_spec installed."""
+        from repro.core import SessionSpec
+
+        spec = SessionSpec(seed=2, sampler_seed=4, batch_per_node=16, seq_len=32)
+        store_a = build_store(tmp_path, "a")
+        _, _, plain_batches, _ = plain_run(
+            store_a, seed=2, sampler_seed=4, engine="replay"
+        )
+        store_b = build_store(tmp_path, "b")
+        loader = RedoxLoader.from_spec(spec, store_b)
+        assert loader.spec == spec
+        for pb, sb in zip(plain_batches, loader.epoch(0)):
+            np.testing.assert_array_equal(pb["returned"], sb["returned"])
+            np.testing.assert_array_equal(pb["tokens"], sb["tokens"])
+        store_a.close()
+        store_b.close()
+
+    def test_spec_json_roundtrip(self):
+        from repro.core import SessionSpec
+
+        spec = SessionSpec(policy="random", seed=9, engine="per_access",
+                           queue_depth=5)
+        assert SessionSpec.from_json(spec.to_json()) == spec
+        import json as _json
+        assert SessionSpec.from_json(
+            _json.loads(_json.dumps(spec.to_json()))
+        ) == spec  # survives an actual wire hop
+
+    def test_spec_rejects_unknown_and_invalid(self):
+        from repro.core import SessionSpec
+
+        with pytest.raises(ValueError, match="unknown SessionSpec fields"):
+            SessionSpec.from_json({"bacth_per_node": 8})  # typo'd knob
+        with pytest.raises(ValueError, match="unknown engine"):
+            SessionSpec(engine="warp")
+        with pytest.raises(ValueError, match="must be positive"):
+            SessionSpec(num_nodes=0)
+        with pytest.raises(ValueError, match="not both"):
+            SessionSpec.from_kwargs(use_planner=True, engine="step")
+
+    def test_open_session_rejects_spec_plus_kwargs(self, tmp_path):
+        from repro.core import SessionSpec
+
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        with pytest.raises(TypeError, match="not.*both|not both"):
+            svc.open_session("j", SessionSpec(), seed=3)
+        svc.close()
+        store.close()
+
+
+class TestSessionLifecycle:
+    """close/close_session idempotency and the unknown-job error surface."""
+
+    def test_close_session_is_idempotent(self, tmp_path):
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        svc.open_session("j", seed=2, batch_per_node=16, seq_len=32)
+        svc.close_session("j")
+        svc.close_session("j")          # second close: no-op
+        svc.close_session("never-was")  # unknown id: no-op too
+        svc.close()
+        svc.close()                     # service close is idempotent as well
+        store.close()
+
+    def test_close_then_reopen_same_job_id(self, tmp_path):
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        s1 = svc.open_session("j", seed=2, batch_per_node=16, seq_len=32)
+        first = [b["returned"].copy() for b in s1.epoch(0)]
+        svc.close_session("j")
+        s2 = svc.open_session("j", seed=2, batch_per_node=16, seq_len=32)
+        second = [b["returned"].copy() for b in s2.epoch(0)]
+        for a, b in zip(first, second):
+            np.testing.assert_array_equal(a, b)  # fresh protocol state
+        svc.close()
+        store.close()
+
+    def test_unknown_job_lookup_has_clear_error(self, tmp_path):
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        svc.open_session("present", seed=2, batch_per_node=16, seq_len=32)
+        # NB: str(KeyError) is the repr of its message, so quotes inside the
+        # message arrive escaped — match on quote-free fragments.
+        with pytest.raises(KeyError, match="no open session for job"):
+            svc.session("absent")
+        with pytest.raises(KeyError, match="present"):
+            svc.session("absent")  # message lists what IS open
+        svc.close()
+        with pytest.raises(KeyError, match="open sessions: none"):
+            svc.session("present")
+        store.close()
+
+    def test_double_open_same_id_rejected(self, tmp_path):
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        svc.open_session("j", seed=2, batch_per_node=16, seq_len=32)
+        with pytest.raises(ValueError, match="already has an open session"):
+            svc.open_session("j", seed=3, batch_per_node=16, seq_len=32)
+        svc.close()
+        store.close()

@@ -1,0 +1,632 @@
+"""Out-of-process transport tests (DESIGN.md §11).
+
+Everything here runs over the REAL transport — Unix sockets and mmap'd
+rings under pytest's tmpdir, no network — and pins the tentpole claim: a
+trainer consuming through a :class:`RedoxClient` (separate thread or
+separate OS process, SIGKILL'd or not) sees the byte-identical GlobalBatch
+stream an in-process :class:`RedoxLoader` produces, and a dead client's
+claims are unwound without disturbing survivors.
+"""
+
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkStore, SessionSpec
+from repro.core.loader import RedoxLoader
+from repro.data.synthetic import SyntheticTokenDataset
+from repro.service import DataService
+from repro.service.transport import (
+    BatchRing,
+    DataServiceServer,
+    RedoxClient,
+    ServiceSuspended,
+    SessionClosed,
+    TransportError,
+)
+from repro.service.transport.ring import (
+    FRAME_BATCH,
+    FRAME_EOE,
+    STATE_CLOSED,
+    RingClosed,
+)
+
+pytestmark = pytest.mark.transport
+
+NUM_DOCS = 96
+SPEC = SessionSpec(seed=5, num_nodes=2, batch_per_node=8, seq_len=32)
+CHILD = Path(__file__).parent / "transport_child.py"
+
+
+def build_store(tmp_path, name="chunks"):
+    ds = SyntheticTokenDataset(NUM_DOCS, vocab_size=97, mean_len=48, seed=3)
+    store = ds.build_store(tmp_path / name, 4, num_slots=16, seed=1)
+    return ChunkStore.open(store.root)
+
+
+def solo_batches(tmp_path, spec, epochs=1):
+    """The in-process reference stream: one loader, same spec, same store
+    bytes, epochs consumed in order."""
+    store = ChunkStore.open(tmp_path / "chunks")
+    loader = RedoxLoader.from_spec(spec, store)
+    out = []
+    for e in range(epochs):
+        out.extend((e, b) for b in loader.epoch(e))
+    store.close()
+    return out
+
+
+def batch_key(epoch, b):
+    """Everything deterministic about a batch (measured read_wait_s skipped)."""
+    return (
+        epoch,
+        int(b["step"]),
+        b["tokens"].tobytes(),
+        b["targets"].tobytes(),
+        b["loss_mask"].tobytes(),
+        np.asarray(b["returned"]).tobytes(),
+        tuple(sorted(
+            (n, tuple(
+                v for f, v in sorted(dataclasses.asdict(io).items())
+                if f != "read_wait_s"
+            ))
+            for n, io in b["io_by_node"].items()
+        )),
+    )
+
+
+@pytest.fixture
+def served(tmp_path):
+    """A running DataServiceServer over a fresh store; yields (server, path)."""
+    store = build_store(tmp_path)
+    svc = DataService(store)
+    server = DataServiceServer(
+        svc, tmp_path / "svc.sock", poll_interval=0.001, heartbeat_timeout=30.0
+    )
+    server.start()
+    yield server, tmp_path / "svc.sock"
+    server.stop()
+    store.close()
+
+
+# ---------------------------------------------------------------- ring unit
+class TestBatchRing:
+    def test_roundtrip_and_wraparound(self, tmp_path):
+        ring = BatchRing.create(tmp_path / "r", 4096)
+        peer = BatchRing.attach(tmp_path / "r")
+        # Frames larger than half the capacity force wrap-around quickly.
+        payload = bytes(range(256)) * 6  # 1536 bytes
+        for i in range(10):
+            assert ring.try_write(FRAME_BATCH, [payload, bytes([i])])
+            kind, got = peer.read(timeout=1.0)
+            assert kind == FRAME_BATCH
+            assert got == payload + bytes([i])
+        assert peer.try_read() is None
+        peer.close()
+        ring.close()
+
+    def test_backpressure_and_budget(self, tmp_path):
+        ring = BatchRing.create(tmp_path / "r", 4096)
+        big = b"x" * 2000
+        assert ring.try_write(FRAME_BATCH, [big])
+        assert ring.try_write(FRAME_BATCH, [big])
+        assert not ring.try_write(FRAME_BATCH, [big])  # full: producer skips
+        assert not ring.writable(2048)
+        with pytest.raises(BufferError):
+            ring.write(FRAME_BATCH, [big])
+        # Consumer drains one frame -> one budget frees up.
+        peer = BatchRing.attach(tmp_path / "r")
+        peer.try_read()
+        assert ring.writable(2048)
+        peer.close()
+        ring.close()
+
+    def test_closed_ring_drains_then_raises(self, tmp_path):
+        ring = BatchRing.create(tmp_path / "r", 4096)
+        ring.write(FRAME_EOE, [b"{}"])
+        ring.mark_state(STATE_CLOSED)
+        peer = BatchRing.attach(tmp_path / "r")
+        assert peer.read(timeout=1.0) == (FRAME_EOE, b"{}")  # pending first
+        with pytest.raises(RingClosed):
+            peer.read(timeout=1.0)
+        peer.close()
+        ring.close()
+
+    def test_attach_rejects_non_ring(self, tmp_path):
+        (tmp_path / "bogus").write_bytes(b"\x00" * 128)
+        with pytest.raises(ValueError, match="not a Redox batch ring"):
+            BatchRing.attach(tmp_path / "bogus")
+
+
+# ------------------------------------------------- in-thread client identity
+class TestClientEquivalence:
+    @pytest.mark.parametrize("engine", ["replay", "step", "per_access"])
+    def test_thread_client_byte_identical(self, tmp_path, served, engine):
+        server, sock = served
+        spec = SPEC.replace(engine=engine)
+        ref = solo_batches(tmp_path, spec, epochs=2)
+        client = RedoxClient(sock, spec, job_id=f"job-{engine}")
+        got = [(e, b) for e in range(2) for b in client.epoch(e)]
+        client.close()
+        assert [batch_key(e, b) for e, b in got] == \
+               [batch_key(e, b) for e, b in ref]
+
+    def test_two_clients_share_bytes(self, tmp_path, served):
+        """Two same-pattern jobs over the socket still dedup physical reads
+        through the shared residency (the PR-3 property, now cross-process)."""
+        server, sock = served
+        a = RedoxClient(sock, SPEC, job_id="jobA")
+        b = RedoxClient(sock, SPEC, job_id="jobB")
+        ref = solo_batches(tmp_path, SPEC)
+
+        outs = {}
+
+        def run(cli, key):
+            outs[key] = [(0, batch) for batch in cli.epoch(0)]
+
+        ta = threading.Thread(target=run, args=(a, "a"))
+        tb = threading.Thread(target=run, args=(b, "b"))
+        ta.start(); tb.start(); ta.join(); tb.join()
+        for key in ("a", "b"):
+            assert [batch_key(e, x) for e, x in outs[key]] == \
+                   [batch_key(e, x) for e, x in ref]
+        agg = a.stats()["aggregate"]
+        assert agg["shared_hits"] > 0
+        a.close()
+        b.close()
+
+    def test_steps_per_epoch_and_unknown_op(self, tmp_path, served):
+        server, sock = served
+        client = RedoxClient(sock, SPEC, job_id="job0")
+        store = ChunkStore.open(tmp_path / "chunks")
+        assert client.steps_per_epoch(0) == \
+            RedoxLoader.from_spec(SPEC, store).steps_per_epoch(0)
+        store.close()
+        with pytest.raises(ValueError, match="unknown transport op"):
+            client._rpc({"op": "nonsense"})
+        client.close()
+
+    def test_duplicate_job_id_rejected(self, served):
+        server, sock = served
+        client = RedoxClient(sock, SPEC, job_id="job0")
+        with pytest.raises(ValueError, match="already has a connected client"):
+            RedoxClient(sock, SPEC, job_id="job0")
+        client.close()
+
+    def test_spec_roundtrips_the_wire(self, served):
+        server, sock = served
+        spec = SPEC.replace(engine="step", queue_depth=3)
+        client = RedoxClient(sock, spec, job_id="job0")
+        # The server echoes the installed session's spec, with the derived
+        # sampler seed materialised.
+        assert client.spec == spec.replace(
+            sampler_seed=spec.effective_sampler_seed
+        )
+        client.close()
+
+
+# ------------------------------------------------------- subprocess identity
+def spawn_child(sock, job_id, spec, out, *, epochs=1, step_sleep=0.0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    return subprocess.Popen(
+        [
+            sys.executable, str(CHILD),
+            "--socket", str(sock), "--job-id", job_id,
+            "--spec", json.dumps(spec.to_json()),
+            "--epochs", str(epochs), "--out", str(out),
+            "--step-sleep", str(step_sleep),
+        ],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+    )
+
+
+def child_lines(out: Path):
+    if not out.exists():
+        return []
+    return [json.loads(line) for line in out.read_text().splitlines()]
+
+
+def solo_lines(tmp_path, spec, epochs=1):
+    """The reference stream in transport_child's line format."""
+    from transport_child import batch_line
+
+    return [
+        json.loads(batch_line(e, b))
+        for e, b in solo_batches(tmp_path, spec, epochs=epochs)
+    ]
+
+
+class TestSubprocessTrainer:
+    @pytest.mark.parametrize("engine", ["replay", "step", "per_access"])
+    def test_separate_process_byte_identical(self, tmp_path, served, engine):
+        """The acceptance criterion: a trainer in its own OS process via
+        RedoxClient == in-process JobSession, for all three engines."""
+        server, sock = served
+        spec = SPEC.replace(engine=engine)
+        out = tmp_path / "child.jsonl"
+        proc = spawn_child(sock, f"job-{engine}", spec, out, epochs=2)
+        _, err = proc.communicate(timeout=120)
+        assert proc.returncode == 0, err.decode()
+        assert child_lines(out) == solo_lines(tmp_path, spec, epochs=2)
+
+    def test_sigkill_one_of_three_mid_epoch(self, tmp_path, served):
+        """SIGKILL one client mid-epoch: survivors byte-identical to solo,
+        the victim's leaked claims unwound."""
+        server, sock = served
+        svc = server.service
+        outs = {j: tmp_path / f"{j}.jsonl" for j in ("a", "b", "victim")}
+        procs = {
+            "a": spawn_child(sock, "a", SPEC, outs["a"], step_sleep=0.02),
+            "b": spawn_child(sock, "b", SPEC, outs["b"], step_sleep=0.02),
+            "victim": spawn_child(
+                sock, "victim", SPEC, outs["victim"], step_sleep=0.05
+            ),
+        }
+        # Kill the victim once it has demonstrably consumed a mid-epoch batch.
+        deadline = time.monotonic() + 60
+        while len(child_lines(outs["victim"])) < 2:
+            assert time.monotonic() < deadline, "victim never started"
+            time.sleep(0.02)
+        procs["victim"].kill()
+        procs["victim"].wait()
+        for j in ("a", "b"):
+            _, err = procs[j].communicate(timeout=120)
+            assert procs[j].returncode == 0, err.decode()
+        ref = solo_lines(tmp_path, SPEC)
+        for j in ("a", "b"):
+            assert child_lines(outs[j]) == ref, f"survivor {j} diverged"
+        # The victim got a correct prefix before dying.
+        got = child_lines(outs["victim"])
+        assert got == ref[: len(got)]
+        # EOF-reap closed the victim's session and unwound its claims.
+        deadline = time.monotonic() + 30
+        while svc.residency.has_claims():
+            assert time.monotonic() < deadline, "victim claims never unwound"
+            time.sleep(0.02)
+        assert all(s.job_id != "victim" for s in svc.sessions)
+
+
+# -------------------------------------------------------------------- churn
+class TestChurn:
+    N_QUICK = 8
+
+    def _churn(self, tmp_path, sock, n_jobs, *, join_delay=0.15):
+        """n_jobs thread clients: half start at once, half join mid-epoch
+        while the first half consumes slowly (the pump admits them into the
+        already-running round)."""
+        specs = {
+            f"j{i}": SPEC.replace(seed=i, engine="replay" if i % 2 else "step")
+            for i in range(n_jobs)
+        }
+        outs, errs = {}, []
+
+        def run(job, delay, sleep):
+            try:
+                time.sleep(delay)
+                cli = RedoxClient(sock, specs[job], job_id=job)
+                got = []
+                for b in cli.epoch(0):
+                    got.append(batch_key(0, b))
+                    time.sleep(sleep)
+                outs[job] = got
+                cli.close()
+            except BaseException as e:  # surfaced below
+                errs.append((job, e))
+
+        threads = []
+        for i, job in enumerate(specs):
+            early = i < n_jobs // 2
+            t = threading.Thread(
+                target=run,
+                args=(job, 0.0 if early else join_delay, 0.01 if early else 0.0),
+            )
+            t.start()
+            threads.append(t)
+        for t in threads:
+            t.join(timeout=180)
+        assert not errs, errs
+        for job, spec in specs.items():
+            ref = [batch_key(0, b) for _, b in solo_batches(tmp_path, spec)]
+            assert outs[job] == ref, f"{job} diverged from its solo run"
+
+    def test_mid_epoch_joins_quick(self, tmp_path, served):
+        server, sock = served
+        self._churn(tmp_path, sock, self.N_QUICK)
+        assert not server.service.residency.has_claims()
+
+    @pytest.mark.slow
+    def test_many_sessions_with_kills(self, tmp_path, served):
+        """Tens of sessions over one socket, subprocess kills included."""
+        server, sock = served
+        # Two waves of thread clients...
+        self._churn(tmp_path, sock, 12)
+        # ...then a subprocess wave with a mid-epoch SIGKILL.
+        outs = {j: tmp_path / f"{j}.jsonl" for j in ("p0", "p1", "pv")}
+        procs = {
+            j: spawn_child(
+                sock, j, SPEC, outs[j],
+                step_sleep=0.05 if j == "pv" else 0.02,
+            )
+            for j in outs
+        }
+        while len(child_lines(outs["pv"])) < 2:
+            time.sleep(0.02)
+        procs["pv"].kill()
+        procs["pv"].wait()
+        ref = solo_lines(tmp_path, SPEC)
+        for j in ("p0", "p1"):
+            _, err = procs[j].communicate(timeout=120)
+            assert procs[j].returncode == 0, err.decode()
+            assert child_lines(outs[j]) == ref
+        deadline = time.monotonic() + 30
+        while server.service.residency.has_claims():
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+
+
+# ------------------------------------------------------------ dead clients
+class TestLiveness:
+    def test_heartbeat_timeout_reaps_frozen_client(self, tmp_path):
+        """A client that stops heartbeating AND stops draining its ring is
+        declared dead and reaped; its session closes, claims unwind."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        server = DataServiceServer(
+            svc, tmp_path / "s.sock", poll_interval=0.001, heartbeat_timeout=0.4
+        )
+        server.start()
+        try:
+            client = RedoxClient(
+                tmp_path / "s.sock", SPEC, job_id="frozen",
+                heartbeat_interval=0,  # heartbeats disabled: plays dead
+            )
+            stream = client.epoch(0)
+            next(stream)  # begin the epoch, consume one batch, then freeze
+            deadline = time.monotonic() + 30
+            while any(s.job_id == "frozen" for s in svc.sessions):
+                assert time.monotonic() < deadline, "frozen client never reaped"
+                time.sleep(0.02)
+            # The client-side stream observes the closed ring (after
+            # draining whatever was already in flight).
+            with pytest.raises(SessionClosed):
+                for _ in stream:
+                    pass
+            assert not svc.residency.has_claims()
+        finally:
+            server.stop()
+            store.close()
+
+    def test_ring_drain_counts_as_liveness(self, tmp_path):
+        """A trainer blocked in long steps (no RPCs) but still consuming
+        batches must NOT be reaped: head movement keeps it alive."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        server = DataServiceServer(
+            svc, tmp_path / "s.sock", poll_interval=0.001, heartbeat_timeout=0.5
+        )
+        server.start()
+        try:
+            client = RedoxClient(
+                tmp_path / "s.sock", SPEC, job_id="slow",
+                heartbeat_interval=0,  # only ring drain keeps it alive
+            )
+            got = []
+            for b in client.epoch(0):
+                got.append(batch_key(0, b))
+                time.sleep(0.2)  # longer than nothing, shorter than timeout
+            ref = [batch_key(0, b) for _, b in solo_batches(tmp_path, SPEC)]
+            assert got == ref
+            client.close()
+        finally:
+            server.stop()
+            store.close()
+
+
+# -------------------------------------------------------- suspend over wire
+class TestSuspendResume:
+    def test_suspend_resume_over_socket(self, tmp_path):
+        """Mid-epoch service suspend over the wire: the client drains every
+        batch produced before the suspend point, reconnects to a resumed
+        server, and the combined stream is byte-identical to solo."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        server = DataServiceServer(svc, tmp_path / "s.sock", poll_interval=0.001)
+        server.start()
+        client = RedoxClient(tmp_path / "s.sock", SPEC, job_id="jobA")
+
+        got = []
+        stream = client.epoch(0)
+        for _ in range(2):  # consume a couple batches, then checkpoint
+            got.append(batch_key(0, next(stream)))
+        assert client.suspend(tmp_path / "ck") == tmp_path / "ck"
+        with pytest.raises(ServiceSuspended):
+            for b in stream:  # drains in-flight frames first
+                got.append(batch_key(0, b))
+        resume_at = len(got)
+        with pytest.raises(ServiceSuspended):
+            client.epoch(1).send(None)  # suspended server refuses new epochs
+        client.close()
+        server.stop()
+        store.close()
+
+        # Fresh process: re-open the store, resume the service, reconnect.
+        store2 = ChunkStore.open(tmp_path / "chunks")
+        svc2 = DataService.resume(tmp_path / "ck", store2)
+        server2 = DataServiceServer(svc2, tmp_path / "s2.sock", poll_interval=0.001)
+        server2.start()
+        client2 = RedoxClient(tmp_path / "s2.sock", job_id="jobA")  # attach
+        assert client2.resume_point == (0, resume_at)
+        got += [batch_key(0, b) for b in client2.epoch(0)]
+        got += [batch_key(1, b) for b in client2.epoch(1)]
+        client2.close()
+        server2.stop()
+        store2.close()
+
+        ref = [batch_key(e, b) for e, b in solo_batches(tmp_path, SPEC, epochs=2)]
+        assert got == ref
+
+    def test_client_resume_from_flag(self, tmp_path):
+        """A client may also hand the suspend dir to open_session itself
+        (fresh server that did NOT pre-resume): the server resolves this
+        job's subdir through the service manifest."""
+        store = build_store(tmp_path)
+        svc = DataService(store)
+        server = DataServiceServer(svc, tmp_path / "s.sock", poll_interval=0.001)
+        server.start()
+        client = RedoxClient(tmp_path / "s.sock", SPEC, job_id="jobA")
+        got = []
+        stream = client.epoch(0)
+        got.append(batch_key(0, next(stream)))
+        client.suspend(tmp_path / "ck")
+        with pytest.raises(ServiceSuspended):
+            for b in stream:
+                got.append(batch_key(0, b))
+        client.close()
+        server.stop()
+        store.close()
+
+        store2 = ChunkStore.open(tmp_path / "chunks")
+        svc2 = DataService(store2)  # blank service, no pre-resume
+        server2 = DataServiceServer(svc2, tmp_path / "s2.sock", poll_interval=0.001)
+        server2.start()
+        client2 = RedoxClient(
+            tmp_path / "s2.sock", job_id="jobA", resume_from=tmp_path / "ck"
+        )
+        assert client2.resume_point == (0, len(got))
+        got += [batch_key(0, b) for b in client2.epoch(0)]
+        client2.close()
+        server2.stop()
+        store2.close()
+        ref = [batch_key(0, b) for _, b in solo_batches(tmp_path, SPEC)]
+        assert got == ref
+
+
+# ------------------------------------------------------------ error surface
+class TestErrors:
+    def test_no_server_listening(self, tmp_path):
+        with pytest.raises(TransportError, match="no data server listening"):
+            RedoxClient(tmp_path / "nothing.sock", SPEC, connect_timeout=0.3)
+
+    def test_server_stop_closes_clients(self, tmp_path, served):
+        server, sock = served
+        client = RedoxClient(sock, SPEC, job_id="job0")
+        server.stop()
+        with pytest.raises((SessionClosed, TransportError)):
+            for _ in client.epoch(0):
+                pass
+
+
+# ------------------------------------------------------------- launch CLIs
+class TestLaunchCLI:
+    """The consolidated launcher flags (satellite: launch/cli.py): every
+    shared data-plane/elastic flag is spelled identically — same type,
+    choices, nargs, metavar, help — by train.py and data_service.py."""
+
+    SHARED = [
+        "--batch", "--seq-len", "--num-docs", "--vocab-size", "--seed",
+        "--policy", "--engine", "--backend", "--resume-data",
+        "--suspend-after",
+    ]
+    # Builder parameters: these defaults intentionally differ per launcher
+    # (historical CLI defaults); everything else must match exactly.
+    PER_LAUNCHER_DEFAULTS = {"--batch", "--seq-len", "--num-docs"}
+
+    @staticmethod
+    def _actions(parser):
+        return {o: a for a in parser._actions for o in a.option_strings}
+
+    def test_shared_flags_spelled_identically(self):
+        from repro.launch.data_service import build_parser as svc_parser
+        from repro.launch.train import build_parser as train_parser
+
+        ta, sa = self._actions(train_parser()), self._actions(svc_parser())
+        for opt in self.SHARED:
+            assert opt in ta, f"train.py lost {opt}"
+            assert opt in sa, f"data_service.py lost {opt}"
+            t, s = ta[opt], sa[opt]
+            same = ("type", "choices", "nargs", "const", "metavar", "help")
+            for attr in same:
+                assert getattr(t, attr) == getattr(s, attr), (opt, attr)
+            if opt not in self.PER_LAUNCHER_DEFAULTS:
+                assert t.default == s.default, opt
+
+    def test_engine_choices_track_session_spec(self):
+        from repro.core.spec import _ENGINES
+        from repro.launch.train import build_parser
+
+        act = self._actions(build_parser())["--engine"]
+        assert tuple(act.choices) == _ENGINES
+
+    def test_bare_resume_data_resolves_per_launcher(self):
+        import argparse
+
+        from repro.launch.cli import RESUME_AUTO, resolve_resume_dir
+
+        ap = argparse.ArgumentParser()
+        assert resolve_resume_dir(ap, None, Path("d")) is None
+        assert resolve_resume_dir(ap, "given", Path("d")) == Path("given")
+        assert resolve_resume_dir(ap, RESUME_AUTO, Path("d")) == Path("d")
+        # Launchers with no default location reject the bare flag.
+        with pytest.raises(SystemExit):
+            resolve_resume_dir(ap, RESUME_AUTO, None)
+
+    def test_train_parses_bare_resume_data(self):
+        from repro.launch.cli import RESUME_AUTO
+        from repro.launch.train import build_parser
+
+        args = build_parser().parse_args(["--arch", "xlstm-350m", "--resume-data"])
+        assert args.resume_data == RESUME_AUTO
+        args = build_parser().parse_args(
+            ["--arch", "xlstm-350m", "--resume-data", "ck"]
+        )
+        assert args.resume_data == "ck"
+
+
+@pytest.mark.slow
+class TestServeEndToEnd:
+    """Two-terminal quickstart as subprocesses: ``data_service --serve`` in
+    one OS process, ``train --data-server`` in another."""
+
+    def test_train_against_served_data_plane(self, tmp_path):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+        sock = tmp_path / "svc.sock"
+        srv = subprocess.Popen(
+            [
+                sys.executable, "-m", "repro.launch.data_service",
+                "--serve", str(sock), "--num-docs", "256",
+                "--vocab-size", "512", "--seq-len", "64", "--co-refill",
+            ],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True,
+        )
+        try:
+            out = subprocess.run(
+                [
+                    sys.executable, "-m", "repro.launch.train",
+                    "--arch", "xlstm-350m", "--steps", "6",
+                    "--seq-len", "64", "--batch", "8",
+                    "--data-server", str(sock),
+                    "--workdir", str(tmp_path / "w"),
+                ],
+                env=env, capture_output=True, text=True, timeout=300,
+            )
+            assert out.returncode == 0, out.stdout + out.stderr
+            assert "done: 6 steps" in out.stdout
+            assert "data plane: " in out.stdout
+        finally:
+            assert srv.poll() is None, srv.stdout.read()  # server survived
+            srv.send_signal(signal.SIGINT)
+            srv.wait(timeout=30)

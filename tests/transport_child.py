@@ -1,0 +1,55 @@
+"""Subprocess trainer for the transport tests: consume epochs over a
+RedoxClient and append one JSON line per batch to ``--out``.
+
+Lines are flushed per batch, so a SIGKILL mid-epoch leaves a valid prefix
+on disk — the churn tests read it to see how far the victim got, and the
+equivalence tests compare the full record (returned ids + token/mask
+checksums) against an in-process solo run.
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.spec import SessionSpec
+from repro.service.transport import RedoxClient
+
+
+def batch_line(epoch: int, batch) -> str:
+    return json.dumps({
+        "epoch": epoch,
+        "step": int(batch["step"]),
+        "returned": np.asarray(batch["returned"]).tolist(),
+        "tok_sum": int(np.asarray(batch["tokens"], dtype=np.int64).sum()),
+        "tgt_sum": int(np.asarray(batch["targets"], dtype=np.int64).sum()),
+        "mask_sum": float(np.asarray(batch["loss_mask"], dtype=np.float64).sum()),
+    })
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--socket", required=True)
+    p.add_argument("--job-id", required=True)
+    p.add_argument("--spec", required=True, help="SessionSpec as JSON")
+    p.add_argument("--epochs", type=int, default=1)
+    p.add_argument("--out", required=True)
+    p.add_argument("--step-sleep", type=float, default=0.0,
+                   help="per-batch consumer delay (makes a slow trainer)")
+    a = p.parse_args()
+    spec = SessionSpec.from_json(json.loads(a.spec))
+    client = RedoxClient(a.socket, spec, job_id=a.job_id,
+                         heartbeat_interval=0.5, connect_timeout=30.0)
+    with open(a.out, "w") as f:
+        for epoch in range(a.epochs):
+            for batch in client.epoch(epoch):
+                f.write(batch_line(epoch, batch) + "\n")
+                f.flush()
+                if a.step_sleep:
+                    time.sleep(a.step_sleep)
+    client.close()
+
+
+if __name__ == "__main__":
+    main()
