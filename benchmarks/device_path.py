@@ -1,0 +1,212 @@
+"""Device data path: kernel parity/throughput + staged vs naive tokens/sec.
+
+Three tables (DESIGN.md §12):
+
+1. **Kernel parity** — every kernel in the ``repro.kernels.parity``
+   registry against its pure-jnp oracle, per (shape, dtype), with the
+   per-dtype tolerance it must meet. The same grid ``tests/
+   test_kernel_parity.py`` enforces, printed with the observed errors.
+2. **Kernel throughput** — best-of-N wall time kernel vs oracle and
+   delivered output MB/s. On this CPU container the Pallas kernels run in
+   interpret mode, so absolute numbers only rank shapes; on a TPU the
+   same table reads as real bandwidth.
+3. **End-to-end device path** — the ``examples/train_lm.py --preset
+   small`` data plane (real chunk store on disk, redirection protocol,
+   2 nodes) feeding an *emulated accelerator step* (a fixed sleep, so the
+   host pipeline — not XLA-on-CPU — is what is measured, as on a real
+   accelerator where the step runs on the device). ``naive`` pays decode
+   + grid assembly + per-step ``jnp.asarray`` copies on the critical
+   path, exactly like the historical train loop; ``stage`` double-buffers
+   that tail onto the DeviceStager's staging thread; ``gather`` ships
+   slot packs and assembles on-device via ``chunk_gather_train``. The
+   headline is tokens/sec per mode plus the stager's overlap fraction.
+
+Usage: PYTHONPATH=src python -m benchmarks.device_path [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import Cluster, DeviceStats, EpochSampler, RedoxLoader
+from repro.data import SyntheticTokenDataset
+from repro.kernels import parity
+
+__all__ = ["main", "run_end_to_end", "run_parity", "run_throughput"]
+
+_WARMUP = 2  # batches consumed before the clock starts (jit/compile)
+
+
+# ----------------------------------------------------------------- kernels
+def run_parity(quick: bool = False) -> list[dict]:
+    return [
+        parity.check_case(case) for case in parity.iter_cases(quick=quick)
+    ]
+
+
+def run_throughput(quick: bool = False) -> list[dict]:
+    return [
+        parity.measure_case(case, iters=3 if quick else 5)
+        for case in parity.iter_cases(quick=quick)
+    ]
+
+
+def print_kernel_tables(parity_rows, tput_rows) -> None:
+    w = max(len(r["case"]) for r in parity_rows)
+    print(f"{'case':<{w}}  {'max_err':>10}  {'tol':>8}  ok")
+    for r in parity_rows:
+        print(f"{r['case']:<{w}}  {r['max_err']:>10.2e}  {r['tol']:>8.0e}  "
+              f"{'PASS' if r['ok'] else 'FAIL'}")
+    print()
+    w = max(len(r["case"]) for r in tput_rows)
+    print(f"{'case':<{w}}  {'kernel_us':>10}  {'ref_us':>10}  {'out_MB/s':>9}")
+    for r in tput_rows:
+        print(f"{r['case']:<{w}}  {r['kernel_us']:>10.0f}  "
+              f"{r['ref_us']:>10.0f}  {r['mb_per_s']:>9.1f}")
+
+
+# -------------------------------------------------------------- end-to-end
+def _build_loader(tmp: Path, *, batch: int, seq: int, steps: int, nodes: int):
+    """The train_lm small-preset data plane, sized to cover ``steps``."""
+    num_docs = max(batch * (steps + _WARMUP + 2), 256)
+    ds = SyntheticTokenDataset(num_docs, 2048, mean_len=seq // 2, seed=5)
+    store = ds.build_store(tmp / "chunks", chunk_size=16,
+                           memory_bytes=int(ds.sizes_bytes.sum() // 4), seed=1)
+    cluster = Cluster(store.plan, nodes, store=store, seed=2,
+                      remote_memory_limit_bytes=1_000_000)
+    sampler = EpochSampler(num_docs, nodes, seed=3)
+    loader = RedoxLoader(cluster, sampler,
+                         batch_per_node=max(batch // nodes, 1), seq_len=seq)
+    return store, loader
+
+
+def _run_mode(mode: str, *, batch: int, seq: int, steps: int,
+              compute_s: float, nodes: int = 2) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.device import DeviceStager
+
+    with tempfile.TemporaryDirectory(prefix="redox_devbench_") as td:
+        store, loader = _build_loader(Path(td), batch=batch, seq=seq,
+                                      steps=steps, nodes=nodes)
+        stager = None
+        if mode == "naive":
+            it = loader.epoch_async(0)
+        elif mode == "stage":
+            stager = DeviceStager()
+            it = stager.stream(loader.epoch_async(0))
+        elif mode == "gather":
+            stager = DeviceStager(use_kernel=True)
+            it = loader.epoch_device(0, stager)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        n = 0
+        t0 = elapsed = None
+        try:
+            for b in it:
+                if mode == "naive":
+                    arrs = (jnp.asarray(b["tokens"]), jnp.asarray(b["targets"]),
+                            jnp.asarray(b["loss_mask"]))
+                else:
+                    arrs = (b["tokens"], b["targets"], b["loss_mask"])
+                jax.block_until_ready(arrs)  # the accelerator "consumes" it
+                time.sleep(compute_s)  # emulated on-device train step
+                n += 1
+                if n == _WARMUP:
+                    t0 = time.perf_counter()
+                    if stager is not None:
+                        stager.stats = DeviceStats()  # clean post-compile view
+                if n >= steps + _WARMUP:
+                    elapsed = time.perf_counter() - t0
+                    break
+        finally:
+            del it  # abandon mid-epoch: exercises the teardown path
+            if stager is not None:
+                stager.close()
+            store.close()
+        assert elapsed is not None, (
+            f"epoch too short for {steps + _WARMUP} steps in mode {mode!r}"
+        )
+        d = stager.stats if stager is not None else None
+        timed = n - _WARMUP
+        return dict(
+            mode=mode,
+            steps=timed,
+            tokens_per_s=timed * batch * seq / elapsed,
+            ms_per_step=elapsed / timed * 1e3,
+            overlap_fraction=(
+                round(d.overlap_fraction, 3) if d is not None else None
+            ),
+            mb_to_device=(
+                round(d.bytes_to_device / 1e6, 3) if d is not None else None
+            ),
+            live_buffers_after=(
+                stager.live_buffers if stager is not None else None
+            ),
+        )
+
+
+def run_end_to_end(quick: bool = False, *, compute_ms: float = 3.0) -> list[dict]:
+    scenarios = [("small-preset", 8, 128, 32 if quick else 96)]
+    if not quick:
+        # Wider grids make the host-side tail (decode + assembly + copy)
+        # a visible fraction of a fixed-length step.
+        scenarios.append(("wide b32 s512", 32, 512, 24))
+    rows = []
+    for name, batch, seq, steps in scenarios:
+        for mode in ("naive", "stage", "gather"):
+            r = _run_mode(mode, batch=batch, seq=seq, steps=steps,
+                          compute_s=compute_ms / 1e3)
+            r["scenario"] = name
+            rows.append(r)
+    return rows
+
+
+def print_end_to_end(rows, *, compute_ms: float) -> None:
+    print(f"emulated accelerator step: {compute_ms:.1f} ms "
+          f"(host pipeline is what differs between modes)")
+    print(f"{'scenario':<14} {'mode':<7} {'steps':>5} {'tokens/s':>10} "
+          f"{'ms/step':>8} {'overlap':>8} {'MB H2D':>7}")
+    base: dict = {}
+    for r in rows:
+        if r["mode"] == "naive":
+            base[r["scenario"]] = r["tokens_per_s"]
+        ov = "-" if r["overlap_fraction"] is None else f"{r['overlap_fraction']:.2f}"
+        mb = "-" if r["mb_to_device"] is None else f"{r['mb_to_device']:.2f}"
+        speed = r["tokens_per_s"] / base[r["scenario"]]
+        print(f"{r['scenario']:<14} {r['mode']:<7} {r['steps']:>5} "
+              f"{r['tokens_per_s']:>10,.0f} {r['ms_per_step']:>8.2f} "
+              f"{ov:>8} {mb:>7}  ({speed:.2f}x vs naive)")
+
+
+# --------------------------------------------------------------------- main
+def main(quick: bool = False, *, compute_ms: float = 3.0) -> dict:
+    parity_rows = run_parity(quick=quick)
+    tput_rows = run_throughput(quick=quick)
+    print_kernel_tables(parity_rows, tput_rows)
+    print()
+    e2e = run_end_to_end(quick=quick, compute_ms=compute_ms)
+    print_end_to_end(e2e, compute_ms=compute_ms)
+    n_fail = sum(not r["ok"] for r in parity_rows)
+    if n_fail:
+        print(f"\nWARNING: {n_fail} parity case(s) FAILED")
+    return dict(
+        compute_ms=compute_ms,
+        parity=parity_rows,
+        throughput=tput_rows,
+        end_to_end=e2e,
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--compute-ms", type=float, default=3.0,
+                    help="emulated accelerator step time for the "
+                         "end-to-end table")
+    a = ap.parse_args()
+    main(quick=a.quick, compute_ms=a.compute_ms)

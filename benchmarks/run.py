@@ -5,8 +5,10 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--json BENCH_run.json]
 Prints per-benchmark tables plus a machine-readable `name,value,derived`
 CSV summary at the end. ``--json`` additionally writes a structured perf
 record — per-section wall time, planner vs per-access epoch throughput,
-and per-backend chunk-read MB/s — so the perf trajectory is tracked
-across PRs (CI uploads it as an artifact).
+per-backend chunk-read MB/s, and the device data path's kernel parity +
+end-to-end tokens/sec (naive vs staged vs gather, with overlap fraction)
+— so the perf trajectory is tracked across PRs (CI uploads it as an
+artifact).
 """
 
 from __future__ import annotations
@@ -31,6 +33,7 @@ def main() -> None:
         breakdown,
         chunk_size,
         convergence,
+        device_path,
         io_overhead,
         multi_job,
         overall,
@@ -88,6 +91,11 @@ def main() -> None:
         "Out-of-process transport: ring throughput + batch latency",
         lambda: service_transport.main(quick=args.quick),
         key="transport",
+    )
+    section(
+        "Device data path: kernel parity + staged vs naive tokens/sec",
+        lambda: device_path.main(quick=args.quick),
+        key="device_path",
     )
     section("Figs 9-11: overall speedups", overall_section, key="overall")
     section("Tables 4+5: ablation breakdown", breakdown.main)

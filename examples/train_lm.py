@@ -23,6 +23,7 @@ from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore_checkp
 from repro.configs import ARCHS, RunConfig, reduced
 from repro.core import Cluster, EpochSampler, RedoxLoader
 from repro.data import SyntheticTokenDataset
+from repro.launch.cli import add_device_args
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.train.train_step import build_train_step, init_train_state
@@ -47,6 +48,7 @@ def main():
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--backend", default="vfs", choices=("vfs", "mmap", "parallel"),
                     help="storage backend serving chunk reads")
+    add_device_args(ap)
     args = ap.parse_args()
 
     p = PRESETS[args.preset]
@@ -80,6 +82,21 @@ def main():
     state = init_train_state(model, opt, seed=0)
     step_fn = jax.jit(build_train_step(model, run, opt), donate_argnums=0)
 
+    stager = None
+    if args.device_path != "naive":
+        from repro.core.device import DeviceStager
+
+        stager = DeviceStager(depth=args.stage_depth,
+                              use_kernel=(args.device_path == "gather"))
+        print(f"device path: {args.device_path} (depth {args.stage_depth})")
+
+    def epoch_batches(epoch):
+        if args.device_path == "gather":
+            return loader.epoch_device(epoch, stager)
+        if args.device_path == "stage":
+            return stager.stream(loader.epoch_async(epoch))
+        return loader.epoch_async(epoch)
+
     ckpt = AsyncCheckpointer(workdir / "ckpt", keep=2)
     start = latest_step(workdir / "ckpt")
     if start:
@@ -91,7 +108,7 @@ def main():
     epoch = 0
     t0 = time.time()
     while step < args.steps:
-        for batch in loader.epoch_async(epoch):
+        for batch in epoch_batches(epoch):
             if step >= args.steps:
                 break
             state, metrics = step_fn(
@@ -116,6 +133,18 @@ def main():
                 ckpt.save(step, state)
         epoch += 1
     ckpt.wait()
+    elapsed = time.time() - t0
+    steps_run = step - int(start or 0)
+    if stager is not None:
+        stager.close()
+        d = stager.stats
+        print(f"device path {args.device_path}: staged {d.steps} batches "
+              f"({d.bytes_to_device / 1e6:.1f} MB to device), "
+              f"overlap fraction {d.overlap_fraction:.2f}")
+    if steps_run:
+        toks = steps_run * p["batch"] * p["seq"]
+        print(f"throughput: {toks / max(elapsed, 1e-9):,.0f} tokens/sec "
+              f"over {steps_run} step(s)")
     st = cluster.nodes[0].stats
     print(
         f"done: {step} steps; epoch-0 node-0 stats: hits={st.local_hits} "

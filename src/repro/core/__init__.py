@@ -10,7 +10,14 @@ from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
 from .spec import SessionSpec
-from .stats import NodeStats, PipelineTimeModel, PlannerStats, ServiceStats, StepIO
+from .stats import (
+    DeviceStats,
+    NodeStats,
+    PipelineTimeModel,
+    PlannerStats,
+    ServiceStats,
+    StepIO,
+)
 from .storage import (
     BACKENDS,
     BackendStats,
@@ -31,6 +38,8 @@ __all__ = [
     "Cluster",
     "ClusterSnapshot",
     "CoorDLLoader",
+    "DeviceStager",
+    "DeviceStats",
     "EpochPlan",
     "EpochPlanner",
     "EpochResult",
@@ -54,3 +63,14 @@ __all__ = [
     "VFSBackend",
     "make_backend",
 ]
+
+
+def __getattr__(name):
+    # DeviceStager lives behind a lazy import: core itself is numpy-only,
+    # and the transport's subprocess trainers must not pay the jax import
+    # unless they actually take the device path.
+    if name in ("DeviceStager", "HostPack", "pack_records"):
+        from . import device
+
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -195,6 +195,33 @@ class RedoxLoader:
         (the epoch's protocol state is then mid-flight; a later
         ``begin_epoch`` asserts on the undrained memory by design).
         """
+        yield from self._pipelined(epoch, plan=plan, assemble=self._assemble)
+
+    def epoch_device(self, epoch: int, stager=None, *, plan=None):
+        """Device-resident batches (DESIGN.md §12): the host pipeline packs
+        slot buffers instead of grids, and a :class:`~repro.core.device.
+        DeviceStager` double-buffers ``device_put`` + the Pallas
+        ``chunk_gather_train`` assembly against the consumer's train step.
+
+        Yields ``GlobalBatch``es whose tokens/targets/loss_mask are device
+        arrays. Abandoning the generator tears down stager and protocol
+        worker deterministically — staged-but-unconsumed device buffers
+        are released, not stranded.
+        """
+        from .device import DeviceStager  # deferred: pulls in jax + kernels
+
+        if stager is None:
+            stager = DeviceStager()
+        def pack(*item):
+            return self._pack(*item, row_pad=stager.row_pad)
+
+        packs = self._pipelined(epoch, plan=plan, assemble=pack, track=False)
+        for batch in stager.stream(packs):
+            self._progress = (epoch, int(batch["step"]) + 1)
+            yield batch
+
+    def _pipelined(self, epoch: int, *, plan, assemble, track: bool = True):
+        """The epoch_async machinery, parametrised over batch assembly."""
         q: queue.Queue = queue.Queue(maxsize=self.queue_depth)
         stop = object()
         abandoned = threading.Event()
@@ -229,8 +256,9 @@ class RedoxLoader:
                 item = q.get()
                 if item is stop:
                     break
-                batch = self._assemble(*item)
-                self._progress = (epoch, int(batch["step"]) + 1)
+                batch = assemble(*item)
+                if track:
+                    self._progress = (epoch, int(batch["step"]) + 1)
                 yield batch
         finally:
             abandoned.set()
@@ -268,6 +296,33 @@ class RedoxLoader:
                 np.concatenate(returned)
                 if returned is not None else np.empty(0, dtype=np.int64)
             ),
+        )
+
+    def _pack(
+        self,
+        payloads,
+        step: int,
+        io_by_node: dict[int, StepIO],
+        returned: "list[np.ndarray] | None" = None,
+        *,
+        row_pad: int = 8,
+    ):
+        """Decode payloads into a HostPack for the device gather path."""
+        from .device import HostPack, pack_records
+
+        flat = [decode_record(p) for p in payloads]
+        ret = (
+            np.concatenate(returned)
+            if returned is not None else np.empty(0, dtype=np.int64)
+        )
+        slot_tokens, lens, idx = pack_records(
+            flat, ret if ret.size else None,
+            seq_len=self.seq_len, pad_id=self.pad_id, row_pad=row_pad,
+        )
+        return HostPack(
+            slot_tokens=slot_tokens, lens=lens, idx=idx,
+            seq_len=self.seq_len, pad_id=self.pad_id,
+            step=step, io_by_node=io_by_node, returned=ret,
         )
 
     def _produce(self, epoch: int, *, plan=None):

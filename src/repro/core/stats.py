@@ -10,7 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["NodeStats", "PipelineTimeModel", "PlannerStats", "ServiceStats", "StepIO"]
+__all__ = [
+    "DeviceStats",
+    "NodeStats",
+    "PipelineTimeModel",
+    "PlannerStats",
+    "ServiceStats",
+    "StepIO",
+]
 
 
 @dataclasses.dataclass
@@ -128,6 +135,11 @@ class StepIO:
     net_messages: int = 0
     net_bytes: int = 0
     read_wait_s: float = 0.0  # *measured* storage stall (real-bytes runs only)
+    # Host->device staging (DESIGN.md §12): wall time spent preparing and
+    # shipping this step's device batch, and the slice of it the consumer
+    # actually waited on (0 when staging was fully hidden behind compute).
+    stage_s: float = 0.0
+    stage_wait_s: float = 0.0
 
     def add(self, other: "StepIO") -> None:
         self.chunk_loads += other.chunk_loads
@@ -136,6 +148,35 @@ class StepIO:
         self.net_messages += other.net_messages
         self.net_bytes += other.net_bytes
         self.read_wait_s += other.read_wait_s
+        self.stage_s += other.stage_s
+        self.stage_wait_s += other.stage_wait_s
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    """Host→device staging counters for one :class:`DeviceStager` stream.
+
+    ``stage_s`` is wall time the staging thread spent assembling + shipping
+    batches (decode/pack, ``device_put``, gather-kernel dispatch);
+    ``wait_s`` is the consumer time actually blocked on a staged batch —
+    the part of staging the double buffer failed to hide.
+    ``overlap_fraction`` is therefore the headline number: 1.0 means the
+    device path is free, 0.0 means it is fully serialized (the naive
+    per-step copy behaves like 0.0 by construction).
+    """
+
+    steps: int = 0
+    bytes_to_device: int = 0   # payload bytes shipped (slot buffers or grids)
+    stage_s: float = 0.0       # staging-thread wall time
+    wait_s: float = 0.0        # consumer wall time blocked on the queue
+    kernel_steps: int = 0      # steps assembled on-device by chunk_gather
+    buffers_released: int = 0  # staged-but-unconsumed batches freed at teardown
+
+    @property
+    def overlap_fraction(self) -> float:
+        if self.stage_s <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.wait_s / self.stage_s)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,6 @@
 """chunk_gather: device-side redirected batch assembly (the paper's
 technique as a Pallas kernel; DESIGN.md §2 "Where a Pallas kernel is
-warranted").
+warranted", §12 "Device-resident data path").
 
 Redox's host protocol batches whole chunks into memory and *redirects* each
 framework request to whatever record currently occupies the target slot.
@@ -14,9 +14,20 @@ a scalar-prefetch operand (known before the body runs), so the BlockSpec
 index_map selects which chunk-slot row to DMA into VMEM — the gather
 happens in the *data movement*, not in compute. Lengths produce the mask.
 
-Layout notes for real TPUs: records are padded to the (8,128)-tile lane
-width by the host packer; the slot row arrives VMEM-resident; the scalar
-table lives in SMEM.
+Two entry points:
+
+* :func:`chunk_gather` — the raw gather: (tokens, mask) grids, the unit
+  the parity suite sweeps.
+* :func:`chunk_gather_train` — the fused training-batch assembly used by
+  the :class:`~repro.core.device.DeviceStager`: one slot-row DMA yields
+  the shifted ``tokens``/``targets`` pair *and* the target-aligned loss
+  mask in a single pass, so the host ships one int32 slot buffer instead
+  of three pre-assembled grids (~1/3 of the H2D bytes) and the grid
+  assembly runs on-device, overlapped with the previous train step.
+
+Layout notes for real TPUs: slot rows are padded to the (8,128)-tile lane
+width by the host packer (``row_pad``); the slot row arrives VMEM-resident;
+the scalar redirection/length tables live in SMEM.
 """
 
 from __future__ import annotations
@@ -28,7 +39,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["chunk_gather"]
+from ..common import resolve_interpret
+
+__all__ = ["chunk_gather", "chunk_gather_train"]
 
 
 def _kernel(idx_ref, len_ref, chunk_ref, tok_ref, mask_ref, *, pad_id):
@@ -49,7 +62,7 @@ def chunk_gather(
     indices: jax.Array,       # (B,) int32 — the redirection table
     *,
     pad_id: int = 0,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
 ):
     """Returns (tokens (B, L) int32, mask (B, L) float32)."""
     num_slots, l = chunk_tokens.shape
@@ -73,6 +86,68 @@ def chunk_gather(
             jax.ShapeDtypeStruct((b, l), jnp.int32),
             jax.ShapeDtypeStruct((b, l), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(indices, record_lens, chunk_tokens)
     return tokens, mask
+
+
+def _train_kernel(
+    idx_ref, len_ref, chunk_ref, tok_ref, tgt_ref, mask_ref, *, seq_len, pad_id
+):
+    # One slot-row DMA per grid step (index_map gather, as above); the body
+    # fuses the next-token shift with the length mask: tokens = row[:S],
+    # targets = row[1:S+1], loss over targets where the *target* position is
+    # still inside the record.
+    row = chunk_ref[0]  # (Lp,) — lane-padded slot row, Lp >= seq_len + 1
+    i = pl.program_id(0)
+    n = len_ref[idx_ref[i]]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (seq_len,), 0)
+    tok = jax.lax.slice(row, (0,), (seq_len,))
+    tgt = jax.lax.slice(row, (1,), (seq_len + 1,))
+    tok_ref[0] = jnp.where(pos < n, tok, pad_id)
+    tgt_ref[0] = jnp.where(pos + 1 < n, tgt, pad_id)
+    mask_ref[0] = (pos + 1 < n).astype(mask_ref.dtype)
+
+
+def chunk_gather_train(
+    chunk_tokens: jax.Array,  # (num_slots, Lp) int32, slot-padded records
+    record_lens: jax.Array,   # (num_slots,) int32, clipped to seq_len + 1
+    indices: jax.Array,       # (B,) int32 — the redirection table
+    *,
+    seq_len: int,
+    pad_id: int = 0,
+    interpret: "bool | None" = None,
+):
+    """Fused redirected-gather + shift + mask: the (B, S) training triple.
+
+    Returns ``(tokens (B, S) int32, targets (B, S) int32,
+    loss_mask (B, S) float32)`` — exactly what ``RedoxLoader._assemble``
+    builds on the host, produced on-device from one slot buffer.
+    """
+    num_slots, lp = chunk_tokens.shape
+    assert lp >= seq_len + 1, (lp, seq_len)
+    b = indices.shape[0]
+    kernel = functools.partial(_train_kernel, seq_len=seq_len, pad_id=pad_id)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # indices, record_lens
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, lp), lambda i, idx, lens: (idx[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, seq_len), lambda i, idx, lens: (i, 0)),
+            pl.BlockSpec((1, seq_len), lambda i, idx, lens: (i, 0)),
+            pl.BlockSpec((1, seq_len), lambda i, idx, lens: (i, 0)),
+        ],
+    )
+    tokens, targets, mask = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((b, seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((b, seq_len), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(indices, record_lens, chunk_tokens)
+    return tokens, targets, mask

@@ -1,4 +1,8 @@
-"""Jit'd wrapper for chunk_gather."""
+"""Jit'd wrappers for chunk_gather / chunk_gather_train.
+
+``interpret=None`` (the default) auto-detects the backend: the kernel is
+compiled on TPU and interpreted elsewhere (``kernels.common``).
+"""
 
 from __future__ import annotations
 
@@ -7,12 +11,23 @@ import functools
 import jax
 
 from .chunk_gather import chunk_gather as _kernel_call
+from .chunk_gather import chunk_gather_train as _train_call
 
-__all__ = ["chunk_gather"]
+__all__ = ["chunk_gather", "chunk_gather_train"]
 
 
 @functools.partial(jax.jit, static_argnames=("pad_id", "interpret"))
-def chunk_gather(chunk_tokens, record_lens, indices, *, pad_id=0, interpret=True):
+def chunk_gather(chunk_tokens, record_lens, indices, *, pad_id=0, interpret=None):
     return _kernel_call(
         chunk_tokens, record_lens, indices, pad_id=pad_id, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("seq_len", "pad_id", "interpret"))
+def chunk_gather_train(
+    chunk_tokens, record_lens, indices, *, seq_len, pad_id=0, interpret=None
+):
+    return _train_call(
+        chunk_tokens, record_lens, indices,
+        seq_len=seq_len, pad_id=pad_id, interpret=interpret,
     )

@@ -1,10 +1,10 @@
-"""Pure-jnp oracle for chunk_gather."""
+"""Pure-jnp oracles for chunk_gather / chunk_gather_train."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["chunk_gather_ref"]
+__all__ = ["chunk_gather_ref", "chunk_gather_train_ref"]
 
 
 def chunk_gather_ref(chunk_tokens, record_lens, indices, *, pad_id=0):
@@ -13,3 +13,13 @@ def chunk_gather_ref(chunk_tokens, record_lens, indices, *, pad_id=0):
     pos = jnp.arange(chunk_tokens.shape[1])[None, :]
     valid = pos < lens[:, None]
     return jnp.where(valid, rows, pad_id), valid.astype(jnp.float32)
+
+
+def chunk_gather_train_ref(chunk_tokens, record_lens, indices, *, seq_len, pad_id=0):
+    rows = chunk_tokens[indices]                   # (B, Lp)
+    lens = record_lens[indices][:, None]           # (B, 1)
+    pos = jnp.arange(seq_len)[None, :]
+    tokens = jnp.where(pos < lens, rows[:, :seq_len], pad_id)
+    targets = jnp.where(pos + 1 < lens, rows[:, 1 : seq_len + 1], pad_id)
+    mask = (pos + 1 < lens).astype(jnp.float32)
+    return tokens, targets, mask

@@ -1,0 +1,30 @@
+"""Shared kernel-dispatch conventions.
+
+Every kernel package exposes ``interpret=None`` on its public ``ops``
+wrapper: ``None`` means *auto* — compile the Pallas kernel when the
+runtime actually is a TPU, fall back to the interpreter everywhere else
+(CPU CI, local dev). Passing an explicit bool always wins, so tests can
+pin interpret mode and real deployments can force compilation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["resolve_interpret", "round_up"]
+
+
+def round_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``n``."""
+    return -(-n // multiple) * multiple
+
+
+def resolve_interpret(interpret: "bool | None" = None) -> bool:
+    """Resolve the tri-state ``interpret`` flag to a concrete bool.
+
+    ``None``  -> auto: compiled on TPU backends, interpreter elsewhere.
+    ``bool``  -> taken literally.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import resolve_interpret
+
 __all__ = ["decode_attention_fwd"]
 
 NEG_INF = -1e30
@@ -65,7 +67,7 @@ def decode_attention_fwd(
     mask: jax.Array,   # (B*KVH, S) bool — slot validity (handles ring buffers)
     *,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
 ) -> jax.Array:
     bkv, g, d = q.shape
     s = k.shape[1]
@@ -89,5 +91,5 @@ def decode_attention_fwd(
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, mask)

@@ -1,4 +1,8 @@
-"""Jit'd wrapper: model-layout (B,1,H,D) decode -> kernel layout and back."""
+"""Jit'd wrapper: model-layout (B,1,H,D) decode -> kernel layout and back.
+
+``interpret=None`` (default) auto-detects the backend: compiled on TPU,
+interpreted elsewhere (``kernels.common``).
+"""
 
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ __all__ = ["decode_attention"]
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def decode_attention(q, cache_k, cache_v, mask, *, block_k=512, interpret=True):
+def decode_attention(q, cache_k, cache_v, mask, *, block_k=512, interpret=None):
     """q: (B, H, D); cache_k/v: (B, S, KVH, D); mask: (B, S) bool.
 
     Returns (B, H, D).

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import resolve_interpret
+
 __all__ = ["flash_attention_fwd"]
 
 NEG_INF = -1e30
@@ -84,7 +86,7 @@ def flash_attention_fwd(
     window: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
 ) -> jax.Array:
     bh, s, d = q.shape
     block_q = min(block_q, s)
@@ -111,5 +113,5 @@ def flash_attention_fwd(
             pltpu.VMEM((block_q,), jnp.float32),      # l: running denom
             pltpu.VMEM((block_q, d), jnp.float32),    # acc: running numerator
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

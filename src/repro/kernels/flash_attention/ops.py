@@ -1,4 +1,8 @@
-"""Jit'd public wrapper for the flash-attention kernel (GQA layout)."""
+"""Jit'd public wrapper for the flash-attention kernel (GQA layout).
+
+``interpret=None`` (default) auto-detects the backend: compiled on TPU,
+interpreted elsewhere (``kernels.common``).
+"""
 
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ __all__ = ["flash_attention", "flash_attention_gqa"]
     jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
 )
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
-                    interpret=True):
+                    interpret=None):
     """(BH, S, D) attention via the Pallas kernel."""
     return flash_attention_fwd(
         q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,

@@ -1,4 +1,8 @@
-"""Jit'd wrapper for the SSD scan kernel."""
+"""Jit'd wrapper for the SSD scan kernel.
+
+``interpret=None`` (default) auto-detects the backend: compiled on TPU,
+interpreted elsewhere (``kernels.common``).
+"""
 
 from __future__ import annotations
 
@@ -12,5 +16,5 @@ __all__ = ["ssd_scan"]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=True):
+def ssd_scan(x, dt, a, b, c, *, chunk=128, interpret=None):
     return ssd_scan_fwd(x, dt, a, b, c, chunk=chunk, interpret=interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import resolve_interpret
+
 __all__ = ["ssd_scan_fwd"]
 
 
@@ -70,7 +72,7 @@ def ssd_scan_fwd(
     c: jax.Array,   # (BH, S, N)
     *,
     chunk: int = 128,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
 ) -> jax.Array:
     bh, s, p = x.shape
     n = b.shape[-1]
@@ -91,5 +93,5 @@ def ssd_scan_fwd(
         out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dt, a, b, c)

@@ -15,11 +15,19 @@ from pathlib import Path
 from ..core.storage.store import BACKENDS
 
 __all__ = [
+    "DEVICE_PATHS",
     "RESUME_AUTO",
     "add_data_plane_args",
+    "add_device_args",
     "add_elastic_args",
     "resolve_resume_dir",
 ]
+
+#: ``--device-path`` spellings (DESIGN.md §12): ``naive`` is the per-step
+#: ``jnp.asarray`` copy, ``stage`` double-buffers host grids onto the
+#: device through a DeviceStager, ``gather`` additionally assembles the
+#: batch on-device via the Pallas chunk_gather_train pass.
+DEVICE_PATHS = ("naive", "stage", "gather")
 
 #: Sentinel for a bare ``--resume-data`` (no directory): the launcher
 #: resolves it to its own default location (train: ``workdir/ckpt/data``);
@@ -56,6 +64,18 @@ def add_data_plane_args(
                    default="replay", help="epoch execution engine")
     g.add_argument("--backend", choices=sorted(BACKENDS), default=None,
                    help="storage backend (default: the store's default)")
+
+
+def add_device_args(ap: argparse.ArgumentParser) -> None:
+    """The host→device staging knobs (DESIGN.md §12), shared verbatim."""
+    g = ap.add_argument_group("device data path")
+    g.add_argument("--device-path", choices=DEVICE_PATHS, default="naive",
+                   help="how batches reach the accelerator: naive per-step "
+                        "copies, double-buffered staging, or staged + "
+                        "on-device Pallas gather assembly")
+    g.add_argument("--stage-depth", type=int, default=2, metavar="N",
+                   help="staged device batches kept in flight "
+                        "(stage/gather paths)")
 
 
 def add_elastic_args(ap: argparse.ArgumentParser) -> None:

@@ -30,7 +30,12 @@ from ..models import build_model
 from ..optim.optimizers import make_optimizer
 from ..service.transport import RedoxClient
 from ..train.train_step import build_train_step, init_train_state
-from .cli import add_data_plane_args, add_elastic_args, resolve_resume_dir
+from .cli import (
+    add_data_plane_args,
+    add_device_args,
+    add_elastic_args,
+    resolve_resume_dir,
+)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -44,6 +49,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--full", action="store_true", help="full-size config (real HW)")
     add_data_plane_args(ap, batch=8, seq_len=128, num_docs=1024)
+    add_device_args(ap)
     add_elastic_args(ap)
     ap.add_argument("--data-server", metavar="SOCKET", default=None,
                     help="consume batches from a repro.launch.data_service "
@@ -64,6 +70,9 @@ def main() -> int:
         ap.error("--suspend-after belongs to the server with --data-server")
     if args.suspend_after is not None and args.resume_data is None:
         ap.error("--suspend-after requires --resume-data")
+    if args.data_server is not None and args.device_path == "gather":
+        ap.error("--device-path gather requires a local data plane (ring "
+                 "frames ship assembled grids); use --device-path stage")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -108,6 +117,24 @@ def main() -> int:
                   f"step {loader.resume_point[1]}")
         else:
             loader = RedoxLoader.from_spec(spec, store)
+    stager = None
+    if args.device_path != "naive":
+        from ..core.device import DeviceStager  # deferred: jax-heavy
+
+        stager = DeviceStager(depth=args.stage_depth,
+                              use_kernel=(args.device_path == "gather"))
+        mode = f"device path: {args.device_path} (depth {args.stage_depth}"
+        if args.device_path == "gather":
+            mode += f", {'interpret' if stager.interpret else 'compiled'} gather"
+        print(mode + ")")
+
+    def epoch_batches(epoch):
+        if args.device_path == "gather":
+            return loader.epoch_device(epoch, stager)
+        if args.device_path == "stage":
+            return stager.stream(loader.epoch_async(epoch))
+        return loader.epoch_async(epoch)
+
     ckpt = AsyncCheckpointer(workdir / "ckpt")
     start = latest_step(workdir / "ckpt")
     if start:
@@ -123,7 +150,7 @@ def main() -> int:
     suspended = False
     epoch, t0 = (loader.resume_point or (0, 0))[0], time.time()
     while step < args.steps and not suspended:
-        for batch in loader.epoch_async(epoch):
+        for batch in epoch_batches(epoch):
             if step >= args.steps:
                 break
             feed = {
@@ -170,6 +197,17 @@ def main() -> int:
                 break
         epoch += 1
     ckpt.wait()
+    elapsed = time.time() - t0
+    if stager is not None:
+        stager.close()
+        d = stager.stats
+        print(f"device path {args.device_path}: staged {d.steps} batches "
+              f"({d.bytes_to_device / 1e6:.1f} MB to device), "
+              f"overlap fraction {d.overlap_fraction:.2f}")
+    if run_steps:
+        toks = run_steps * spec.num_nodes * spec.batch_per_node * spec.seq_len
+        print(f"throughput: {toks / max(elapsed, 1e-9):,.0f} tokens/sec "
+              f"over {run_steps} step(s)")
     if args.data_server is not None:
         loader.close()
     if store is not None:
@@ -178,7 +216,7 @@ def main() -> int:
         print(f"suspended after {run_steps} step(s) -> {data_dir}; "
               f"rerun with the same flags to continue")
     else:
-        print(f"done: {step} steps in {time.time()-t0:.0f}s; workdir={workdir}")
+        print(f"done: {step} steps in {elapsed:.0f}s; workdir={workdir}")
     return 0
 
 

@@ -155,6 +155,22 @@ class RedoxClient:
     # already pipelined through the ring, so they are the same thing.
     epoch_async = epoch
 
+    def epoch_device(self, epoch: int, stager=None):
+        """Device-resident batches over the ring (DESIGN.md §12): frames
+        are decoded and double-buffered onto the device by a
+        :class:`~repro.core.device.DeviceStager` while the trainer's
+        previous step computes.
+
+        Ring frames ship pre-assembled grids, so this is the staging half
+        only — the Pallas gather path needs the host-side slot packs and
+        is reserved for in-process loaders (``RedoxLoader.epoch_device``).
+        """
+        from ...core.device import DeviceStager  # deferred: pulls in jax
+
+        if stager is None:
+            stager = DeviceStager(use_kernel=False)
+        return stager.stream(self.epoch(epoch))
+
     # ------------------------------------------------------------- lifecycle
     def suspend(self, out_dir: "str | Path") -> Path:
         """Ask the service to checkpoint its whole data plane (all jobs)."""

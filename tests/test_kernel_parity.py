@@ -1,0 +1,163 @@
+"""Kernel parity harness: every kernel vs its pure-jnp oracle.
+
+The shape x dtype grid and the per-dtype tolerances live in
+``repro.kernels.parity`` — the same registry ``benchmarks/device_path.py``
+prints as a table — so the CI sweep and the benchmark can never drift
+apart. Semantics edge cases that a grid sweep cannot express (sliding
+windows, block-shape independence, ring-buffer masks, duplicate
+redirection indices) are kept as explicit tests below.
+
+Runs in interpret mode on CPU (``interpret=None`` auto-detects); on a
+real TPU the identical suite exercises the compiled kernels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import parity
+from repro.kernels.chunk_gather.ops import chunk_gather, chunk_gather_train
+from repro.kernels.chunk_gather.ref import chunk_gather_train_ref
+from repro.kernels.common import resolve_interpret
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_attention_gqa
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+pytestmark = pytest.mark.kernels
+
+RNG = np.random.default_rng(7)
+
+
+# ----------------------------------------------------------- registry sweep
+@pytest.mark.parametrize(
+    "case", parity.iter_cases(), ids=lambda c: c.name
+)
+def test_parity_grid(case):
+    r = parity.check_case(case)
+    assert r["ok"], (
+        f"{r['case']}: max err {r['max_err']:.3e} exceeds tol {r['tol']:.0e}"
+    )
+
+
+def test_grid_covers_every_kernel():
+    """The sweep must touch all four kernel packages (and stay in sync
+    with the registry if one is added)."""
+    swept = {c.kernel for c in parity.iter_cases()}
+    assert swept == set(parity.KERNELS) and len(swept) >= 4
+
+
+def test_interpret_auto_detection():
+    """interpret=None resolves per backend: interpreted off-TPU, compiled
+    on TPU; explicit values pass through."""
+    import jax
+
+    auto = resolve_interpret(None)
+    assert auto == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+# --------------------------------------------------- flash_attention extras
+class TestFlashAttentionEdges:
+    @pytest.mark.parametrize("window", [32, 96, 1024])
+    def test_sliding_window(self, window):
+        bh, s, d = 2, 256, 64
+        q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), jnp.float32) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_block_shape_independence(self):
+        bh, s, d = 2, 256, 64
+        q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), jnp.float32) for _ in range(3))
+        outs = [
+            flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5, rtol=1e-5)
+
+    def test_gqa_wrapper(self):
+        b, s, h, kvh, d = 2, 128, 8, 2, 32
+        q = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        v = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        out = flash_attention_gqa(q, k, v, block_q=64, block_k=64)
+        assert out.shape == (b, s, h, d)
+        assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+# -------------------------------------------------- decode_attention extras
+class TestDecodeAttentionEdges:
+    def test_ring_buffer_mask(self):
+        """Rotating-window cache = arbitrary validity pattern; exactness."""
+        b, h, kvh, s, d = 1, 4, 2, 256, 64
+        q = jnp.asarray(RNG.normal(size=(b, h, d)), jnp.float32)
+        ck = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        cv = jnp.asarray(RNG.normal(size=(b, s, kvh, d)), jnp.float32)
+        # only slots [64:128) valid, as after ring wrap-around
+        mask = jnp.zeros((b, s), bool).at[:, 64:128].set(True)
+        out = decode_attention(q, ck, cv, mask, block_k=64)
+        qg = q.reshape(b * kvh, h // kvh, d)
+
+        def fold(t):
+            return t.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
+
+        m = jnp.repeat(mask[:, None, :], kvh, 1).reshape(b * kvh, s)
+        ref = decode_attention_ref(qg, fold(ck), fold(cv), m).reshape(b, h, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------ chunk_gather extras
+class TestChunkGatherEdges:
+    def test_duplicate_indices(self):
+        """Redirection may serve the same slot to multiple rows in a step."""
+        ct = jnp.asarray(RNG.integers(1, 100, (8, 32)), jnp.int32)
+        lens = jnp.full((8,), 32, jnp.int32)
+        idx = jnp.asarray([3, 3, 3, 0], jnp.int32)
+        t, _ = chunk_gather(ct, lens, idx)
+        np.testing.assert_array_equal(np.asarray(t[0]), np.asarray(t[1]))
+        np.testing.assert_array_equal(np.asarray(t[0]), np.asarray(ct[3]))
+
+    def test_train_matches_host_grid_semantics(self):
+        """chunk_gather_train == the loader's _to_grid slicing: tokens are
+        row[:-1], targets row[1:], mask aligned to targets."""
+        slots, full, b = 6, 33, 9  # seq_len 32
+        ct = jnp.asarray(RNG.integers(1, 500, (slots, 40)), jnp.int32)
+        lens = jnp.asarray([1, 5, 33, 17, 40, 2], jnp.int32).clip(max=full)
+        idx = jnp.asarray(RNG.integers(0, slots, (b,)), jnp.int32)
+        tok, tgt, mask = chunk_gather_train(ct, lens, idx, seq_len=32, pad_id=0)
+        rt, rg, rm = chunk_gather_train_ref(ct, lens, idx, seq_len=32, pad_id=0)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(rt))
+        np.testing.assert_array_equal(np.asarray(tgt), np.asarray(rg))
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(rm))
+        # length-1 record (slot 0): no target at all -> all-zero mask row
+        rows = np.flatnonzero(np.asarray(idx) == 0)
+        for r in rows:
+            assert np.asarray(mask)[r].sum() == 0
+
+    def test_train_duplicate_slots_share_one_row(self):
+        ct = jnp.asarray(RNG.integers(1, 100, (8, 40)), jnp.int32)
+        lens = jnp.full((8,), 33, jnp.int32)
+        idx = jnp.asarray([5, 5, 2, 5], jnp.int32)
+        tok, tgt, _ = chunk_gather_train(ct, lens, idx, seq_len=32)
+        np.testing.assert_array_equal(np.asarray(tok[0]), np.asarray(tok[1]))
+        np.testing.assert_array_equal(np.asarray(tok[0]), np.asarray(tok[3]))
+        np.testing.assert_array_equal(np.asarray(tok[0]), np.asarray(ct[5, :32]))
+        np.testing.assert_array_equal(np.asarray(tgt[0]), np.asarray(ct[5, 1:33]))
+
+
+# ---------------------------------------------------------- ssd_scan extras
+class TestSSDScanEdges:
+    def test_chunk_size_independence(self):
+        bh, s, p, n = 2, 256, 32, 16
+        x = jnp.asarray(RNG.normal(size=(bh, s, p)), jnp.float32)
+        dt = jnp.asarray(RNG.random((bh, s)) * 0.3 + 0.01, jnp.float32)
+        a = jnp.asarray(-RNG.random((bh, 1)) - 0.1, jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(bh, s, n)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(bh, s, n)), jnp.float32)
+        outs = [np.asarray(ssd_scan(x, dt, a, b, c, chunk=cs)) for cs in (32, 64, 128, 256)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, atol=1e-4, rtol=1e-4)

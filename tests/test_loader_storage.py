@@ -129,6 +129,29 @@ class TestRedoxLoader:
         loader._worker.join(timeout=5.0)
         assert not loader._worker.is_alive(), "worker thread leaked"
 
+    def test_device_loader_abandoned_consumer_releases_buffers(self, tmp_path):
+        """Same contract for the device path (DESIGN.md §12): abandoning
+        epoch_device must join the protocol worker AND the staging thread,
+        and release every staged-but-unconsumed device buffer."""
+        from repro.core.device import DeviceStager
+
+        ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
+        loader = RedoxLoader(
+            cluster, sampler, batch_per_node=8, seq_len=32, queue_depth=1
+        )
+        stager = DeviceStager(depth=1)
+        gen = loader.epoch_device(0, stager)
+        next(gen)
+        gen.close()
+        assert loader._worker is not None
+        loader._worker.join(timeout=5.0)
+        assert not loader._worker.is_alive(), "worker thread leaked"
+        assert stager._thread is not None
+        stager._thread.join(timeout=5.0)
+        assert not stager._thread.is_alive(), "staging thread leaked"
+        assert stager.live_buffers == 0, "device buffers stranded"
+        stager.close()  # idempotent after stream teardown
+
     def test_async_loader_exception_in_consumer_joins_worker(self, tmp_path):
         ds, store, cluster, sampler = build_dataset(tmp_path, nodes=1)
         loader = RedoxLoader(
