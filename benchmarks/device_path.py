@@ -147,6 +147,9 @@ def _run_mode(mode: str, *, batch: int, seq: int, steps: int,
             live_buffers_after=(
                 stager.live_buffers if stager is not None else None
             ),
+            # Raw round-trippable snapshot for the --json record (StatsDict):
+            # downstream tooling reads this instead of re-picking fields.
+            device_stats=d.to_dict() if d is not None else None,
         )
 
 

@@ -1,0 +1,118 @@
+"""Traced multi-job epoch: per-stage attribution + metrics snapshot.
+
+Runs one small K-job service epoch under the span tracer (DESIGN.md §13),
+folds the trace into the overlap-aware per-stage attribution report, and
+snapshots the service metrics registry. ``run.py --json`` saves the raw
+Chrome trace (``BENCH_trace.json`` — drop it on ui.perfetto.dev) and the
+Prometheus text (``BENCH_metrics.txt``) next to the perf record; CI
+uploads both as artifacts so any PR's pipeline shape can be inspected
+without rerunning the bench.
+
+The section also pins the report's defining identity on real traffic:
+``sum(exclusive_s) + idle_s`` must land within 10% of the measured epoch
+wall (it is exact up to float error — the sweep-line attributes every
+instant to exactly one stage).
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import ChunkStore, VFSBackend
+from repro.data import SyntheticTokenDataset
+from repro.obs import attribution, format_report, tracing
+from repro.service import DataService
+from repro.service.transport.server import service_metrics
+
+
+def run_traced(
+    jobs: int = 2,
+    *,
+    num_docs: int = 384,
+    chunk_size: int = 8,
+    groups: int = 8,
+    mean_len: int = 64,
+    batch: int = 16,
+    seq_len: int = 64,
+    latency_ms: float = 0.2,
+    seed: int = 0,
+) -> dict:
+    """One traced K-job co-scheduled epoch. Returns the BENCH row plus the
+    raw ``chrome`` trace object and ``metrics_text`` exposition."""
+    with tempfile.TemporaryDirectory(prefix="redox_obs_") as tmp:
+        root = Path(tmp) / "chunks"
+        ds = SyntheticTokenDataset(
+            num_docs, vocab_size=32000, mean_len=mean_len, seed=seed
+        )
+        ds.build_store(
+            root, chunk_size, num_slots=groups * chunk_size, seed=seed + 1
+        )
+        store = ChunkStore.open(
+            root, backend=VFSBackend(latency_s=latency_ms / 1e3)
+        )
+        svc = DataService(store)
+        for j in range(jobs):
+            svc.open_session(
+                f"job{j}", seed=seed + 100 * j + 7,
+                batch_per_node=batch, seq_len=seq_len,
+            )
+        with tracing(capacity=1 << 18) as tracer:
+            t0 = time.perf_counter()
+            steps = sum(1 for _ in svc.co_epoch(0))
+            wall = time.perf_counter() - t0
+        att = attribution(tracer.events(), wall_s=wall)
+        reg = service_metrics(svc)
+        for j, st in svc.residency.per_job_stats.items():
+            reg.register_stats("service", lambda st=st: st, labels={"job": str(j)})
+        row = dict(
+            jobs=jobs,
+            steps=steps,
+            wall_s=wall,
+            events=len(tracer),
+            dropped=tracer.dropped,
+            attribution=att,
+            chrome=tracer.to_chrome(),
+            metrics_text=reg.exposition(),
+        )
+        svc.close()
+        store.close()
+    return row
+
+
+def main(quick: bool = False) -> dict:
+    kw = dict(num_docs=256, latency_ms=0.1) if quick else {}
+    res = run_traced(2, **kw)
+    print(
+        f"traced {res['jobs']}-job epoch: {res['steps']} steps, "
+        f"{res['events']} events ({res['dropped']} dropped)"
+    )
+    print(format_report(res["attribution"], measured_wall_s=res["wall_s"]))
+    att = res["attribution"]
+    covered = sum(att["exclusive_s"].values()) + att["idle_s"]
+    assert abs(covered - res["wall_s"]) <= 0.1 * res["wall_s"], (
+        "attribution does not sum to the measured wall: "
+        f"{covered:.3f}s vs {res['wall_s']:.3f}s"
+    )
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--trace", type=Path, default=None, metavar="FILE",
+                    help="also write the Chrome trace JSON here")
+    args = ap.parse_args()
+    if args.jobs == 2:
+        out = main(quick=args.quick)
+    else:
+        out = run_traced(args.jobs)
+        print(format_report(out["attribution"], measured_wall_s=out["wall_s"]))
+    if args.trace is not None:
+        import json
+
+        args.trace.write_text(json.dumps(out["chrome"]))
+        print(f"trace -> {args.trace}")

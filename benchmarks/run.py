@@ -36,6 +36,7 @@ def main() -> None:
         device_path,
         io_overhead,
         multi_job,
+        obs_trace,
         overall,
         planner_speed,
         roofline_report,
@@ -71,6 +72,18 @@ def main() -> None:
         overall.print_table(rows)
         return rows
 
+    def obs_section():
+        res = obs_trace.main(quick=args.quick)
+        chrome = res.pop("chrome")
+        metrics_text = res.pop("metrics_text")
+        if args.json is not None:
+            trace_path = args.json.with_name("BENCH_trace.json")
+            trace_path.write_text(json.dumps(chrome))
+            metrics_path = args.json.with_name("BENCH_metrics.txt")
+            metrics_path.write_text(metrics_text)
+            print(f"trace -> {trace_path}; metrics -> {metrics_path}")
+        return res
+
     section("Table 1: I/O overhead", lambda: io_overhead.main([]))
     section(
         "Storage backends: chunk-read throughput (MB/s)",
@@ -96,6 +109,11 @@ def main() -> None:
         "Device data path: kernel parity + staged vs naive tokens/sec",
         lambda: device_path.main(quick=args.quick),
         key="device_path",
+    )
+    section(
+        "Observability: traced epoch attribution (DESIGN.md §13)",
+        obs_section,
+        key="obs",
     )
     section("Figs 9-11: overall speedups", overall_section, key="overall")
     section("Tables 4+5: ablation breakdown", breakdown.main)

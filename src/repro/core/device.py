@@ -45,6 +45,8 @@ import time
 import jax
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from ..kernels.chunk_gather.ops import chunk_gather_train
 from ..kernels.common import resolve_interpret, round_up
 from .stats import DeviceStats
@@ -177,6 +179,13 @@ class DeviceStager:
             loss_mask = jax.device_put(item["loss_mask"], self.device)
             moved = sum(np.asarray(item[k]).nbytes for k in _GRID_KEYS)
         stage_s = time.perf_counter() - t0
+        tracer = trace.get()
+        if tracer is not None:
+            tracer.complete(
+                "stager.stage", "stage", t0, stage_s,
+                {"step": int(item.get("step", -1)), "bytes": int(moved),
+                 "kernel": bool(is_pack and self.use_kernel is not False)},
+            )
         # Copy the StepIO entries before annotating: replay-engine batches
         # share them with the EpochPlan, which must stay reusable.
         io = {
@@ -258,6 +267,10 @@ class DeviceStager:
                 t0 = time.perf_counter()
                 item = q.get()
                 wait = time.perf_counter() - t0
+                tracer = trace.get()
+                if tracer is not None:
+                    # The slice of staging the double buffer failed to hide.
+                    tracer.complete("stager.wait", "stage", t0, wait)
                 if item is end:
                     break
                 with self._lock:

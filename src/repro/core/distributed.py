@@ -33,6 +33,8 @@ import time
 
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from .chunking import ChunkingPlan
 from .protocol import _SCAN_BLOCK, LocalNode, _prev_occurrence
 from .sampler import EpochSampler
@@ -685,6 +687,8 @@ class Cluster:
                         break
                 elif step >= num_steps:
                     break
+                tracer = trace.get()
+                t0 = time.perf_counter() if tracer is not None else 0.0
                 io_by_node: dict[int, StepIO] = {}
                 if recorder is not None:
                     recorder.begin_step(step - start_step)
@@ -710,6 +714,13 @@ class Cluster:
                 if recorder is not None:
                     recorder.end_step(step - start_step, returned, io_by_node)
                 self.current_step = step + 1
+                if tracer is not None:
+                    # Spans cover production only — consumer time between
+                    # yields must not pollute the proto stage.
+                    tracer.complete(
+                        "proto.step", "proto", t0,
+                        time.perf_counter() - t0, {"step": step},
+                    )
                 yield step, returned, payloads, io_by_node
                 step += 1
             if stepping == "floor_tail":
@@ -842,6 +853,8 @@ class Cluster:
                 for loc, data in rm._payloads.items():
                     pool[int(rm._loc_file[loc])] = data
         for step in range(plan.num_steps + (1 if plan.has_tail else 0)):
+            tracer = trace.get()
+            t0 = time.perf_counter() if tracer is not None else 0.0
             io_by_node = plan.step_io(step)
             if store is not None:
                 for li in range(*plan.load_range(step)):
@@ -870,6 +883,11 @@ class Cluster:
                 payloads = [
                     pool.pop(int(f)) for ret in returned for f in ret.tolist()
                 ]
+            if tracer is not None:
+                tracer.complete(
+                    "replay.step", "proto", t0, time.perf_counter() - t0,
+                    {"step": plan.start_step + step},
+                )
             # Suffix plans (EpochPlanner.plan_from) are step-indexed from
             # their resume point; yield absolute step numbers either way.
             yield plan.start_step + step, returned, payloads, io_by_node

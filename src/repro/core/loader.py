@@ -37,6 +37,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from ..data.tokens import decode_record
 from .distributed import Cluster
 from .elastic import ClusterSnapshot
@@ -282,8 +284,9 @@ class RedoxLoader:
         returned: "list[np.ndarray] | None" = None,
     ):
         """Decode raw record payloads and pack the fixed-shape grid."""
-        flat = [decode_record(p) for p in payloads]
-        tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
+        with trace.span("loader.assemble", "decode", step=int(step)):
+            flat = [decode_record(p) for p in payloads]
+            tokens, mask = _to_grid(flat, self.seq_len + 1, self.pad_id)
         return GlobalBatch(
             tokens=tokens[:, :-1],
             targets=tokens[:, 1:],
@@ -310,15 +313,16 @@ class RedoxLoader:
         """Decode payloads into a HostPack for the device gather path."""
         from .device import HostPack, pack_records
 
-        flat = [decode_record(p) for p in payloads]
-        ret = (
-            np.concatenate(returned)
-            if returned is not None else np.empty(0, dtype=np.int64)
-        )
-        slot_tokens, lens, idx = pack_records(
-            flat, ret if ret.size else None,
-            seq_len=self.seq_len, pad_id=self.pad_id, row_pad=row_pad,
-        )
+        with trace.span("loader.pack", "decode", step=int(step)):
+            flat = [decode_record(p) for p in payloads]
+            ret = (
+                np.concatenate(returned)
+                if returned is not None else np.empty(0, dtype=np.int64)
+            )
+            slot_tokens, lens, idx = pack_records(
+                flat, ret if ret.size else None,
+                seq_len=self.seq_len, pad_id=self.pad_id, row_pad=row_pad,
+            )
         return HostPack(
             slot_tokens=slot_tokens, lens=lens, idx=idx,
             seq_len=self.seq_len, pad_id=self.pad_id,

@@ -30,6 +30,8 @@ import time
 
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from .distributed import Cluster
 from .sampler import EpochSampler
 from .stats import NodeStats, PlannerStats, StepIO
@@ -341,6 +343,12 @@ class EpochPlanner:
             joined_nodes=shadow.num_nodes - initial_nodes,
         )
         plan.stats.plan_time_s = time.perf_counter() - t0
+        tracer = trace.get()
+        if tracer is not None:
+            tracer.complete(
+                "planner.plan", "plan", t0, plan.stats.plan_time_s,
+                {"epoch": epoch, "steps": steps},
+            )
         return plan
 
     def plan_from(
@@ -386,6 +394,13 @@ class EpochPlanner:
             joined_nodes=shadow.num_nodes - initial_nodes,
         )
         plan.stats.plan_time_s = time.perf_counter() - t0
+        tracer = trace.get()
+        if tracer is not None:
+            tracer.complete(
+                "planner.plan_from", "plan", t0, plan.stats.plan_time_s,
+                {"epoch": snapshot.epoch, "start_step": snapshot.step,
+                 "steps": steps},
+            )
         return plan
 
     def state_at(

@@ -16,12 +16,34 @@ __all__ = [
     "PipelineTimeModel",
     "PlannerStats",
     "ServiceStats",
+    "StatsDict",
     "StepIO",
 ]
 
 
+class StatsDict:
+    """Round-trippable dict form for stats dataclasses.
+
+    ``to_dict()`` emits the dataclass fields only (derived ``@property``
+    ratios are recomputed on the way back in), so
+    ``cls.from_dict(x.to_dict()) == x`` holds exactly. This is the one
+    serialization every consumer shares: ``MetricsRegistry.collect()``,
+    the transport stats/metrics RPCs, and the benchmark JSON records.
+    """
+
+    def to_dict(self) -> dict:
+        return {
+            f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict):
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
 @dataclasses.dataclass
-class NodeStats:
+class NodeStats(StatsDict):
     """Exact per-node protocol counters for one epoch."""
 
     accesses: int = 0
@@ -72,7 +94,7 @@ class NodeStats:
 
 
 @dataclasses.dataclass
-class PlannerStats:
+class PlannerStats(StatsDict):
     """Counters for the clairvoyant plan/execute split (core/planner.py).
 
     ``scheduled_read_hits`` vs ``heuristic_prefetch_hits`` separates backend
@@ -92,7 +114,7 @@ class PlannerStats:
 
 
 @dataclasses.dataclass
-class ServiceStats:
+class ServiceStats(StatsDict):
     """Shared-residency counters for one job (or, merged, for a whole
     :class:`repro.service.DataService`).
 
@@ -126,7 +148,7 @@ class ServiceStats:
 
 
 @dataclasses.dataclass
-class StepIO:
+class StepIO(StatsDict):
     """Per-training-step I/O demand of one node (input to the time model)."""
 
     chunk_loads: int = 0
@@ -153,7 +175,7 @@ class StepIO:
 
 
 @dataclasses.dataclass
-class DeviceStats:
+class DeviceStats(StatsDict):
     """Host→device staging counters for one :class:`DeviceStager` stream.
 
     ``stage_s`` is wall time the staging thread spent assembling + shipping
@@ -174,8 +196,13 @@ class DeviceStats:
 
     @property
     def overlap_fraction(self) -> float:
+        """Share of staging time hidden behind compute, in [0, 1].
+
+        Zero staging time means nothing was staged, so nothing was
+        overlapped — report 0.0 rather than dividing by zero (or the old,
+        misleading 1.0 for an idle stager)."""
         if self.stage_s <= 0.0:
-            return 1.0
+            return 0.0
         return max(0.0, 1.0 - self.wait_s / self.stage_s)
 
 

@@ -27,11 +27,13 @@ import abc
 import dataclasses
 from pathlib import Path
 
+from repro.core.stats import StatsDict
+
 __all__ = ["BackendStats", "StorageBackend"]
 
 
 @dataclasses.dataclass
-class BackendStats:
+class BackendStats(StatsDict):
     """Counters shared by all backends (times in seconds)."""
 
     chunk_reads: int = 0       # whole-file read() calls served

@@ -22,6 +22,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from ..chunking import ChunkingPlan
 from .base import BackendStats, StorageBackend
 from .mapped import MmapBackend
@@ -135,6 +137,10 @@ class ChunkStore:
     def schedule_reads(self, chunks: "list[int]") -> None:
         """Hand the planner's exact chunk-read schedule to the backend."""
         if chunks:
+            trace.instant(
+                "store.schedule_reads", "read",
+                backend=self._backend.name, chunks=len(chunks),
+            )
             self._backend.schedule_reads([self.chunk_path(k) for k in chunks])
 
     @property
@@ -194,7 +200,11 @@ class ChunkStore:
         """One batched read -> [(file_id, record_bytes), ...] in slot order."""
         offs = self._index()[chunk]
         files = self.plan.files_in_chunk(chunk)
-        blob = self._backend.read(self.chunk_path(chunk))
+        with trace.span(
+            "store.read_chunk", "read",
+            chunk=chunk, backend=self._backend.name,
+        ):
+            blob = self._backend.read(self.chunk_path(chunk))
         return [
             (int(f), blob[offs[j] : offs[j + 1]]) for j, f in enumerate(files)
         ]

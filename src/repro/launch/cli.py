@@ -20,6 +20,7 @@ __all__ = [
     "add_data_plane_args",
     "add_device_args",
     "add_elastic_args",
+    "add_obs_args",
     "resolve_resume_dir",
 ]
 
@@ -91,6 +92,21 @@ def add_elastic_args(ap: argparse.ArgumentParser) -> None:
                    help="suspend the data plane to --resume-data after N "
                         "steps and exit (restart with the same flags to "
                         "continue byte-identically)")
+
+
+def add_obs_args(ap: argparse.ArgumentParser) -> None:
+    """Observability flags (DESIGN.md §13), shared verbatim."""
+    g = ap.add_argument_group("observability")
+    g.add_argument("--trace", type=str, default=None, metavar="FILE",
+                   help="record a span trace of the run and write Chrome-"
+                        "trace JSON to FILE (open in Perfetto UI or "
+                        "chrome://tracing); prints the per-stage epoch-time "
+                        "attribution report on exit")
+    g.add_argument("--trace-capacity", type=int, default=262144, metavar="N",
+                   help="trace ring capacity in events (oldest dropped)")
+    g.add_argument("--metrics", action="store_true",
+                   help="print the Prometheus-style metrics exposition "
+                        "(counters/stats snapshot) on exit")
 
 
 def resolve_resume_dir(

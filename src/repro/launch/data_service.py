@@ -25,9 +25,16 @@ from pathlib import Path
 
 from ..core import ChunkStore, SessionSpec
 from ..data import SyntheticTokenDataset
+from ..obs import attribution, format_report, trace
 from ..service import DataService
 from ..service.transport import DataServiceServer
-from .cli import add_data_plane_args, add_elastic_args, resolve_resume_dir
+from ..service.transport.server import service_metrics
+from .cli import (
+    add_data_plane_args,
+    add_elastic_args,
+    add_obs_args,
+    resolve_resume_dir,
+)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -44,6 +51,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--store-dir", type=Path, default=None,
                     help="reuse/build the chunk store here instead of a tmpdir")
     add_elastic_args(ap)
+    add_obs_args(ap)
     ap.add_argument("--serve", metavar="SOCKET", default=None,
                     help="serve sessions out-of-process on this unix socket "
                          "instead of pumping local jobs (trainers connect "
@@ -63,6 +71,7 @@ def main(argv=None) -> int:
     if args.serve is not None and args.suspend_after is not None:
         ap.error("--suspend-after is driven over the socket when serving "
                  "(RedoxClient.suspend)")
+    tracer = trace.enable(args.trace_capacity) if args.trace else None
 
     with contextlib.ExitStack() as stack:
         if args.store_dir is None:
@@ -106,9 +115,15 @@ def main(argv=None) -> int:
             with DataServiceServer(svc, args.serve) as server:
                 print(f"serving on {args.serve} "
                       f"({len(svc.sessions)} resumed session(s), "
-                      f"ctrl-c to stop)", flush=True)
+                      f"ctrl-c to stop; scrape with the metrics/trace_dump "
+                      f"RPCs)", flush=True)
                 with contextlib.suppress(KeyboardInterrupt):
                     server.serve_forever()
+                if args.metrics:
+                    print(server.metrics.exposition(), end="")
+            if tracer is not None:
+                out = tracer.dump(args.trace)
+                print(f"trace: {len(tracer)} events -> {out}")
             store.close()
             return 0
 
@@ -163,6 +178,22 @@ def main(argv=None) -> int:
               f"saved={saved/1e6:.1f}MB "
               f"peak_cache={agg['peak_cache_bytes']/1e6:.1f}MB "
               f"evictions={agg['evictions']}")
+        if args.metrics:
+            reg = service_metrics(svc)
+            for j, st in svc.residency.per_job_stats.items():
+                reg.register_stats(
+                    "service", lambda st=st: st, labels={"job": str(j)}
+                )
+            print(reg.exposition(), end="")
+        if tracer is not None:
+            out = tracer.dump(args.trace)
+            print(f"trace: {len(tracer)} events ({tracer.dropped} dropped) "
+                  f"-> {out}; open in the Perfetto UI or chrome://tracing")
+            print(format_report(
+                attribution(tracer.events(), wall_s=wall),
+                measured_wall_s=wall,
+            ))
+            trace.disable()
         svc.close()
         store.close()
     return 0

@@ -26,7 +26,15 @@ from ..checkpoint.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..configs import RunConfig, get_config, list_archs, reduced
 from ..core import ChunkStore, RedoxLoader, SessionSpec
 from ..data import SyntheticTokenDataset
+from ..core.stats import PipelineTimeModel, StepIO
 from ..models import build_model
+from ..obs import (
+    MetricsRegistry,
+    attribution,
+    format_report,
+    model_columns,
+    trace,
+)
 from ..optim.optimizers import make_optimizer
 from ..service.transport import RedoxClient
 from ..train.train_step import build_train_step, init_train_state
@@ -34,6 +42,7 @@ from .cli import (
     add_data_plane_args,
     add_device_args,
     add_elastic_args,
+    add_obs_args,
     resolve_resume_dir,
 )
 
@@ -51,6 +60,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_data_plane_args(ap, batch=8, seq_len=128, num_docs=1024)
     add_device_args(ap)
     add_elastic_args(ap)
+    add_obs_args(ap)
     ap.add_argument("--data-server", metavar="SOCKET", default=None,
                     help="consume batches from a repro.launch.data_service "
                          "--serve process at this unix socket instead of "
@@ -58,6 +68,36 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--job-id", default="train0",
                     help="session id on the data server (--data-server only)")
     return ap
+
+
+#: Nominal NAS storage/network profile for the DESIGN §6 model columns
+#: printed next to the measured attribution under ``--trace`` (same shape
+#: as the benchmarks/calibration.py entries; this box's synthetic store is
+#: page-cached, so the model shows what the run's I/O demand would cost on
+#: the paper's target storage, not what it cost here).
+TRACE_TIME_MODEL = PipelineTimeModel(
+    disk_bw=200e6, file_overhead=8e-3, chunk_overhead=8e-3,
+    net_bw=1e9, net_latency=2e-4,
+)
+
+
+def _local_metrics(loader, store, stager) -> MetricsRegistry:
+    """Registry over a local data plane's live stats objects."""
+    reg = MetricsRegistry()
+    if store is not None:
+        reg.register_stats("backend", lambda: store.backend_stats)
+    if stager is not None:
+        reg.register_stats("device", lambda: stager.stats)
+    cluster = getattr(loader, "cluster", None)
+    if cluster is not None:
+        for r, node in enumerate(cluster.nodes):
+            reg.register_stats(
+                "node", lambda n=node: n.stats, labels={"node": str(r)}
+            )
+    last_plan = getattr(loader, "last_plan", None)
+    if last_plan is not None:
+        reg.register_stats("planner", lambda: last_plan.stats)
+    return reg
 
 
 def main() -> int:
@@ -73,6 +113,8 @@ def main() -> int:
     if args.data_server is not None and args.device_path == "gather":
         ap.error("--device-path gather requires a local data plane (ring "
                  "frames ship assembled grids); use --device-path stage")
+
+    tracer = trace.enable(args.trace_capacity) if args.trace else None
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -147,6 +189,9 @@ def main() -> int:
 
     step = int(start or 0)
     run_steps = 0
+    # Per-node StepIO grid for the §6 model columns (--trace only). NB:
+    # a Tracer is sized by its event count — test identity, not truth.
+    io_grid = [[] for _ in range(spec.num_nodes)] if tracer is not None else None
     suspended = False
     epoch, t0 = (loader.resume_point or (0, 0))[0], time.time()
     while step < args.steps and not suspended:
@@ -178,7 +223,19 @@ def main() -> int:
                 feed["loss_mask"] = jnp.concatenate(
                     [jnp.zeros((b, p), jnp.float32), feed["loss_mask"]], axis=1
                 )
-            state, metrics = step_fn(state, feed)
+            if tracer is None:
+                state, metrics = step_fn(state, feed)
+            else:
+                # Force the step inside the span so "compute" reflects real
+                # device time, not dispatch (tracing is opt-in, so the
+                # pipeline bubble this sync adds is acceptable).
+                with trace.span("train.step", "compute", step=step):
+                    state, metrics = step_fn(state, feed)
+                    jax.block_until_ready(metrics)
+            if io_grid is not None:
+                by_node = batch.get("io_by_node") or {}
+                for r in range(spec.num_nodes):
+                    io_grid[r].append(by_node.get(r, StepIO()))
             step += 1
             run_steps += 1
             if step % 10 == 0 or step == 1:
@@ -208,6 +265,24 @@ def main() -> int:
         toks = run_steps * spec.num_nodes * spec.batch_per_node * spec.seq_len
         print(f"throughput: {toks / max(elapsed, 1e-9):,.0f} tokens/sec "
               f"over {run_steps} step(s)")
+    if args.metrics:
+        if args.data_server is not None:
+            print(loader.metrics()["text"], end="")  # server-side registry
+        else:
+            print(_local_metrics(loader, store, stager).exposition(), end="")
+    if tracer is not None:
+        out = tracer.dump(args.trace)
+        print(f"trace: {len(tracer)} events ({tracer.dropped} dropped) -> "
+              f"{out}; open in the Perfetto UI or chrome://tracing")
+        att = attribution(tracer.events(), wall_s=elapsed)
+        model = None
+        if run_steps and any(io_grid):
+            model = model_columns(
+                io_grid, TRACE_TIME_MODEL,
+                att["busy_s"].get("compute", 0.0) / run_steps,
+            )
+        print(format_report(att, model=model, measured_wall_s=elapsed))
+        trace.disable()
     if args.data_server is not None:
         loader.close()
     if store is not None:

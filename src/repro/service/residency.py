@@ -34,8 +34,11 @@ re-reads, counted in :class:`ServiceStats.evictions`).
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
+
+from repro.obs import tracer as trace
 
 from ..core.stats import ServiceStats
 
@@ -187,6 +190,8 @@ class SharedResidency:
         shared-cache hit or physical read. Returns the store's
         ``[(file_id, bytes), ...]`` records."""
         chunk = int(chunk)
+        tracer = trace.get()
+        t0 = time.perf_counter() if tracer is not None else 0.0
         st = self.job_stats(job)
         while True:
             with self._lock:
@@ -199,6 +204,12 @@ class SharedResidency:
                     e.seq = self._seq
                     records = e.records
                     self._maybe_release_locked(chunk)
+                    if tracer is not None:
+                        tracer.complete(
+                            "residency.claim", "read", t0,
+                            time.perf_counter() - t0,
+                            {"chunk": chunk, "hit": True},
+                        )
                     return records
                 ev = self._inflight.get(chunk)
                 if ev is None:
@@ -225,6 +236,11 @@ class SharedResidency:
             if self._retain_locked(chunk):
                 self._insert_locked(chunk, records, nbytes)
             ev.set()
+        if tracer is not None:
+            tracer.complete(
+                "residency.claim", "read", t0, time.perf_counter() - t0,
+                {"chunk": chunk, "hit": False},
+            )
         return records
 
     # -------------------------------------------------------------- internals
@@ -263,6 +279,7 @@ class SharedResidency:
                 lru = min(self._entries, key=lambda k: self._entries[k].seq)
                 self.cache_bytes -= self._entries.pop(lru).nbytes
                 self.evictions += 1
+                trace.instant("residency.evict", "read", chunk=lru)
             if self.cache_bytes + nbytes > limit:
                 return
         self._seq += 1

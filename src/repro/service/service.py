@@ -48,6 +48,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.obs import tracer as trace
+
 from ..core.loader import RedoxLoader
 from ..core.planner import EpochPlan, EpochPlanner, PlanRecorder
 from ..core.spec import SessionSpec
@@ -705,7 +707,11 @@ class DataService:
                     if s not in candidates or cursors[s.job_id] != round_:
                         continue
                     try:
-                        item = next(gens[s.job_id])
+                        with trace.span(
+                            "service.pump", "service",
+                            job=str(s.job_id), round=round_,
+                        ):
+                            item = next(gens[s.job_id])
                     except StopIteration:
                         live.remove(s)
                         if on_done is not None:
@@ -740,29 +746,15 @@ class DataService:
         per_job = self.residency.per_job_stats
         agg = self.aggregate_stats()
         return {
-            "per_job": {
-                str(j): {
-                    "physical_reads": st.physical_reads,
-                    "physical_bytes": st.physical_bytes,
-                    "shared_hits": st.shared_hits,
-                    "shared_bytes": st.shared_bytes,
-                    "co_refill_hits": st.co_refill_hits,
-                }
-                for j, st in per_job.items()
-            },
+            "per_job": {str(j): st.to_dict() for j, st in per_job.items()},
             "bytes_per_job": {
                 str(j): st.physical_bytes + st.shared_bytes
                 for j, st in per_job.items()
             },
+            # dup_loads_avoided is a derived @property, so it rides on top
+            # of the round-trippable field dict.
             "aggregate": {
-                "physical_reads": agg.physical_reads,
-                "physical_bytes": agg.physical_bytes,
-                "shared_hits": agg.shared_hits,
-                "shared_bytes": agg.shared_bytes,
-                "dup_loads_avoided": agg.dup_loads_avoided,
-                "co_refill_hits": agg.co_refill_hits,
-                "evictions": agg.evictions,
-                "peak_cache_bytes": agg.peak_cache_bytes,
+                **agg.to_dict(), "dup_loads_avoided": agg.dup_loads_avoided,
             },
         }
 

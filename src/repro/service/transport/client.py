@@ -180,6 +180,23 @@ class RedoxClient:
     def stats(self) -> dict:
         return self._rpc({"op": "stats"})["stats"]
 
+    def metrics(self) -> dict:
+        """Scrape the live server: ``{"metrics": flat snapshot,
+        "text": Prometheus exposition}`` (see ``repro.obs.MetricsRegistry``)."""
+        resp = self._rpc({"op": "metrics"})
+        return {"metrics": resp["metrics"], "text": resp["text"]}
+
+    def trace_dump(self, path: "str | Path | None" = None):
+        """Export the server process's trace. With ``path`` the server
+        writes the Chrome JSON to that (server-local) file and the number
+        of events is returned; without it the trace object itself comes
+        back inline (None when server-side tracing is off)."""
+        msg: dict = {"op": "trace_dump"}
+        if path is not None:
+            msg["path"] = str(path)
+        resp = self._rpc(msg)
+        return resp.get("path", resp.get("trace")), resp["events"]
+
     def close(self) -> None:
         if self._closed.is_set():
             return

@@ -33,7 +33,6 @@ less than one budget free — that skip IS the per-session backpressure.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import mmap
 import struct
@@ -41,6 +40,8 @@ import time
 from pathlib import Path
 
 import numpy as np
+
+from repro.obs import tracer as trace
 
 from ...core.loader import GlobalBatch, _to_grid
 from ...core.stats import StepIO
@@ -200,13 +201,14 @@ class BatchRing:
         total = sum(memoryview(v).nbytes for v in views)
         if self.free_bytes < FRAME_OVERHEAD + total:
             return False
-        pos = self.tail
-        self._copy_in(pos, struct.pack("<IB", total, kind))
-        pos += FRAME_OVERHEAD
-        for v in views:
-            pos += self._copy_in(pos, v)
-        # counter-last: the frame only becomes visible once fully copied
-        struct.pack_into("<Q", self._mm, _OFF_TAIL, pos)
+        with trace.span("ring.write", "ring", kind=kind, nbytes=total):
+            pos = self.tail
+            self._copy_in(pos, struct.pack("<IB", total, kind))
+            pos += FRAME_OVERHEAD
+            for v in views:
+                pos += self._copy_in(pos, v)
+            # counter-last: the frame only becomes visible once fully copied
+            struct.pack_into("<Q", self._mm, _OFF_TAIL, pos)
         return True
 
     def write(self, kind: int, parts) -> None:
@@ -241,18 +243,20 @@ class BatchRing:
         """Blocking pop: poll until a frame arrives, the producer marks the
         ring closed/suspended (-> :class:`RingClosed`), or ``timeout``."""
         deadline = time.monotonic() + timeout
-        while True:
-            frame = self.try_read()
-            if frame is not None:
-                return frame
-            state = self.state
-            if state != STATE_OPEN:
-                raise RingClosed(state)
-            if time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"no frame within {timeout}s (server stalled or gone)"
-                )
-            time.sleep(poll)
+        # The span covers poll-wait + copy-out: consumer-visible ring time.
+        with trace.span("ring.read", "ring"):
+            while True:
+                frame = self.try_read()
+                if frame is not None:
+                    return frame
+                state = self.state
+                if state != STATE_OPEN:
+                    raise RingClosed(state)
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"no frame within {timeout}s (server stalled or gone)"
+                    )
+                time.sleep(poll)
 
 
 # ------------------------------------------------------------ batch frames
@@ -273,8 +277,9 @@ def encode_step_frame(item, seq_len: int, pad_id: int) -> list:
     parts. Token decode + grid assembly happen here, server-side, and the
     contiguous grid goes straight into the ring — one copy, no pickle."""
     payloads, step, io_by_node, returned = item
-    flat = [decode_record(p) for p in payloads]
-    grid, mask = _to_grid(flat, seq_len + 1, pad_id)
+    with trace.span("ring.encode", "decode", step=int(step)):
+        flat = [decode_record(p) for p in payloads]
+        grid, mask = _to_grid(flat, seq_len + 1, pad_id)
     ret = (
         np.concatenate(returned)
         if returned is not None and len(returned)
@@ -287,7 +292,7 @@ def encode_step_frame(item, seq_len: int, pad_id: int) -> list:
         "shape": [int(grid.shape[0]), int(grid.shape[1])],
         "nret": int(ret.size),
         "io": {
-            str(int(r)): dataclasses.asdict(io)
+            str(int(r)): io.to_dict()
             for r, io in (io_by_node or {}).items()
         },
     }).encode()
@@ -312,6 +317,6 @@ def decode_batch_frame(payload: bytes) -> GlobalBatch:
         targets=grid[:, 1:],
         loss_mask=mask[:, 1:],
         step=meta["step"],
-        io_by_node={int(r): StepIO(**v) for r, v in meta["io"].items()},
+        io_by_node={int(r): StepIO.from_dict(v) for r, v in meta["io"].items()},
         returned=returned,
     )

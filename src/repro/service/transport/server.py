@@ -33,6 +33,9 @@ import threading
 import time
 from pathlib import Path
 
+from repro.obs import MetricsRegistry
+from repro.obs import tracer as trace
+
 from ..service import SERVICE_MANIFEST, DataService
 from .ring import (
     FRAME_BATCH,
@@ -46,7 +49,7 @@ from .ring import (
 )
 from .wire import JsonChannel, ServiceSuspended, error_response
 
-__all__ = ["DataServiceServer"]
+__all__ = ["DataServiceServer", "service_metrics"]
 
 
 class _PumpAbort(Exception):
@@ -103,6 +106,7 @@ class DataServiceServer:
         self._suspend_req: "tuple[Path, threading.Event, list] | None" = None
         self._listener: "socket.socket | None" = None
         self._ring_seq = 0
+        self.metrics = service_metrics(service)
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> "DataServiceServer":
@@ -364,6 +368,10 @@ class DataServiceServer:
             return {"ok": True, "planned": len(plans)}, job_id
         if op == "stats":
             return {"ok": True, "stats": self.service.stats_report()}, job_id
+        if op == "metrics":
+            return self._op_metrics(), job_id
+        if op == "trace_dump":
+            return self._op_trace_dump(msg), job_id
         if op == "close_session":
             if job_id is not None:
                 # Leave the channel open: the ok-response still has to go
@@ -428,6 +436,35 @@ class DataServiceServer:
             "resume_point": list(rp) if rp is not None else None,
         }, job_id
 
+    def _op_metrics(self) -> dict:
+        """Live scrape: flat snapshot + Prometheus text. Per-job providers
+        are (re-)registered on every scrape, so jobs opened after the
+        server started are always covered."""
+        for j, st in self.service.residency.per_job_stats.items():
+            self.metrics.register_stats(
+                "service", lambda st=st: st, labels={"job": str(j)}
+            )
+        return {
+            "ok": True,
+            "metrics": self.metrics.collect(),
+            "text": self.metrics.exposition(),
+        }
+
+    def _op_trace_dump(self, msg: dict) -> dict:
+        """Export the server process's trace ring. With ``path`` the Chrome
+        JSON is written server-side (the trace can be large); otherwise it
+        is returned inline."""
+        tracer = trace.get()
+        if tracer is None:
+            return {"ok": True, "trace": None, "events": 0}
+        path = msg.get("path")
+        if path is not None:
+            tracer.dump(path)
+            return {"ok": True, "path": str(path), "events": len(tracer)}
+        return {
+            "ok": True, "trace": tracer.to_chrome(), "events": len(tracer)
+        }
+
     def _op_suspend(self, msg: dict) -> dict:
         out_dir = Path(msg["dir"])
         done = threading.Event()
@@ -441,6 +478,23 @@ class DataServiceServer:
         if not done.wait(timeout=120.0):
             raise RuntimeError("suspend timed out waiting for the pump")
         return box[0]
+
+
+def service_metrics(service: DataService) -> MetricsRegistry:
+    """A registry wired to a :class:`DataService`'s live stats objects:
+    the aggregate ServiceStats, the storage BackendStats, and the shared
+    residency's cache gauges (per-job stats join at scrape time — see
+    ``DataServiceServer._op_metrics``)."""
+    reg = MetricsRegistry()
+    reg.register_stats("service", service.aggregate_stats)
+    reg.register_stats("backend", lambda: service.store.backend_stats)
+    reg.register_stats("residency", lambda: {
+        "cache_bytes": service.residency.cache_bytes,
+        "peak_cache_bytes": service.residency.peak_cache_bytes,
+        "evictions": service.residency.evictions,
+        "open_sessions": len(service.sessions),
+    })
+    return reg
 
 
 def _suspended_error() -> ServiceSuspended:
