@@ -189,6 +189,10 @@ def backend_report(
                 # the exact schedule; heuristic hints are the fallback
                 sched_hits=b.scheduled_hits,
                 prefetch_hits=b.prefetch_hits,
+                # blocked time split: readahead futures not done in time vs
+                # inline cold-miss reads (sync backends: all in future_wait)
+                future_wait_s=b.wait_seconds,
+                miss_read_s=b.miss_read_seconds,
                 peak_inflight=b.peak_inflight,
             ))
             store.close()
@@ -198,13 +202,14 @@ def backend_report(
 def print_backend_table(rows: list[dict]) -> None:
     print(
         f"{'backend':9s} {'steps':>5s} {'wall_s':>7s} {'read_wait_s':>11s} "
-        f"{'disk_MB':>8s} {'MB/s':>8s} {'loads':>6s} {'sched':>6s} "
-        f"{'ra_hits':>7s} {'inflight':>8s}"
+        f"{'miss_s':>7s} {'disk_MB':>8s} {'MB/s':>8s} {'loads':>6s} "
+        f"{'sched':>6s} {'ra_hits':>7s} {'inflight':>8s}"
     )
     for r in rows:
         print(
             f"{r['backend']:9s} {r['steps']:5d} {r['wall_s']:7.2f} "
-            f"{r['read_wait_s']:11.4f} {r['disk_mb']:8.1f} "
+            f"{r['read_wait_s']:11.4f} {r['miss_read_s']:7.4f} "
+            f"{r['disk_mb']:8.1f} "
             f"{r['throughput_mbs']:8.1f} {r['chunk_loads']:6d} "
             f"{r['sched_hits']:6d} {r['prefetch_hits']:7d} {r['peak_inflight']:8d}"
         )

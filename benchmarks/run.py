@@ -34,6 +34,7 @@ def main() -> None:
         chunk_size,
         convergence,
         device_path,
+        eviction,
         io_overhead,
         multi_job,
         obs_trace,
@@ -99,6 +100,11 @@ def main() -> None:
         "Multi-job data service: shared-cache aggregate throughput",
         lambda: multi_job.main(quick=args.quick),
         key="multi_job",
+    )
+    section(
+        "Belady vs LRU eviction under shared-cache byte caps",
+        lambda: eviction.main(quick=args.quick),
+        key="eviction",
     )
     section(
         "Out-of-process transport: ring throughput + batch latency",

@@ -130,6 +130,7 @@ class ServiceStats(StatsDict):
     shared_bytes: int = 0      # bytes of those claims (reads avoided)
     co_refill_hits: int = 0    # refill choices steered by the co-refill hook
     evictions: int = 0         # cache-limit evictions (claims may re-read)
+    cache_bypass: int = 0      # reads served but refused caching (cap pressure)
     peak_cache_bytes: int = 0  # high-water mark of shared cache residency
 
     @property

@@ -40,16 +40,31 @@ class BackendStats(StatsDict):
     ranged_reads: int = 0      # read_range() calls served
     bytes_read: int = 0        # payload bytes handed to callers
     file_opens: int = 0        # OS-level open()/mmap() operations
-    wait_seconds: float = 0.0  # time callers spent blocked inside read()
+    # Caller-blocked time inside read(), split by cause. For synchronous
+    # backends every read is inline, so all of it lands in wait_seconds;
+    # async backends put future waits (readahead that wasn't finished in
+    # time) in wait_seconds and cold-miss inline reads (nothing was ever
+    # submitted for the path) in miss_read_seconds — the §6 model treats
+    # them differently: misses cost full storage latency, waits shrink
+    # toward zero as readahead depth grows.
+    wait_seconds: float = 0.0       # blocked on a submitted read finishing
+    miss_read_seconds: float = 0.0  # blocked on an inline cold-miss read
+    cold_misses: int = 0       # read() calls served by neither readahead source
     prefetch_issued: int = 0   # heuristic readahead reads actually submitted
     prefetch_hits: int = 0     # read() calls served by a heuristic prefetch
     scheduled_issued: int = 0  # readahead reads submitted from an exact schedule
     scheduled_hits: int = 0    # read() calls served by the exact schedule
     peak_inflight: int = 0     # max concurrent background reads observed
 
+    @property
+    def blocked_seconds(self) -> float:
+        """Total caller time blocked inside read(), whatever the cause."""
+        return self.wait_seconds + self.miss_read_seconds
+
     def throughput(self) -> float:
         """Observed blocking-read throughput (bytes/s of caller wait time)."""
-        return self.bytes_read / self.wait_seconds if self.wait_seconds > 0 else 0.0
+        blocked = self.blocked_seconds
+        return self.bytes_read / blocked if blocked > 0 else 0.0
 
 
 class StorageBackend(abc.ABC):

@@ -162,8 +162,16 @@ class ParallelBackend(StorageBackend):
             blob = self.inner.read(path)
         else:
             blob = fut.result()
+        elapsed = time.perf_counter() - t0
         with self._lock:
-            self.stats.wait_seconds += time.perf_counter() - t0
+            # Miss latency and prefetch-wait are different failure modes
+            # (no readahead issued vs readahead not finished in time), so
+            # they are accounted separately — see BackendStats.
+            if fut is None:
+                self.stats.miss_read_seconds += elapsed
+                self.stats.cold_misses += 1
+            else:
+                self.stats.wait_seconds += elapsed
             self.stats.chunk_reads += 1
             self.stats.bytes_read += len(blob)
         return blob

@@ -17,6 +17,7 @@ from ..core.storage.store import BACKENDS
 __all__ = [
     "DEVICE_PATHS",
     "RESUME_AUTO",
+    "add_autotune_args",
     "add_data_plane_args",
     "add_device_args",
     "add_elastic_args",
@@ -92,6 +93,24 @@ def add_elastic_args(ap: argparse.ArgumentParser) -> None:
                    help="suspend the data plane to --resume-data after N "
                         "steps and exit (restart with the same flags to "
                         "continue byte-identically)")
+
+
+def add_autotune_args(ap: argparse.ArgumentParser) -> None:
+    """Model-fitted autotuning flags (DESIGN.md §14), shared verbatim."""
+    g = ap.add_argument_group("autotuning")
+    g.add_argument("--autotune", action="store_true",
+                   help="calibrate the chunk store (repro.autotune) and "
+                        "auto-select storage backend, readahead depth, and "
+                        "cache byte cap from the fitted §6 time model; an "
+                        "explicit --backend (or --cache-mb where it exists) "
+                        "overrides the corresponding choice")
+    g.add_argument("--autotune-memory-mb", type=float, default=None,
+                   metavar="MB", help="ceiling for the autotuned cache cap")
+    g.add_argument("--compute-per-step", type=float, default=0.0,
+                   metavar="SECONDS",
+                   help="per-step compute time fed to the autotuner's epoch "
+                        "prediction and the service's admission control "
+                        "(0: treat the run as I/O bound)")
 
 
 def add_obs_args(ap: argparse.ArgumentParser) -> None:

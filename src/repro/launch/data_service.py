@@ -24,12 +24,14 @@ import time
 from pathlib import Path
 
 from ..core import ChunkStore, SessionSpec
+from ..core.storage import make_backend
 from ..data import SyntheticTokenDataset
 from ..obs import attribution, format_report, trace
-from ..service import DataService
+from ..service import AdmissionControl, DataService
 from ..service.transport import DataServiceServer
 from ..service.transport.server import service_metrics
 from .cli import (
+    add_autotune_args,
     add_data_plane_args,
     add_elastic_args,
     add_obs_args,
@@ -48,6 +50,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="steer refill tie-breaks toward shareable chunks")
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="shared residency cap in MB (default: unbounded)")
+    ap.add_argument("--eviction", choices=["belady", "lru"], default="belady",
+                    help="cache eviction under --cache-mb: clairvoyant "
+                         "Belady/MIN over the merged claim schedule "
+                         "(default) or plain least-recently-claimed")
+    add_autotune_args(ap)
+    ap.add_argument("--admission-mb-s", type=float, default=None,
+                    metavar="MB/S",
+                    help="storage bandwidth budget for open_session "
+                         "admission control (default with --autotune: the "
+                         "calibrated bandwidth of the chosen backend)")
+    ap.add_argument("--admission-mode", choices=["reject", "queue"],
+                    default=None,
+                    help="what an over-budget open_session gets: an "
+                         "immediate AdmissionRejected, or queueing until "
+                         "capacity frees (enables admission control)")
     ap.add_argument("--store-dir", type=Path, default=None,
                     help="reuse/build the chunk store here instead of a tmpdir")
     add_elastic_args(ap)
@@ -90,8 +107,52 @@ def main(argv=None) -> int:
                 root, args.chunk_size,
                 num_slots=args.groups * args.chunk_size, seed=args.seed,
             )
-        store = ChunkStore.open(root, backend=args.backend or "vfs")
         limit = int(args.cache_mb * 1e6) if args.cache_mb else None
+        tuned_bw = None
+        if args.autotune:
+            from .. import autotune
+
+            _, choice = autotune.tune_store(
+                root,
+                compute_per_step_s=args.compute_per_step,
+                num_steps=max(args.num_docs // max(args.batch, 1), 1),
+                memory_limit_bytes=(
+                    int(args.autotune_memory_mb * 1e6)
+                    if args.autotune_memory_mb is not None else None
+                ),
+            )
+            print(f"autotune: {choice.describe()}")
+            tuned_bw = choice.model.disk_bw
+            if args.backend is None:
+                kw = {"readahead": choice.readahead} if choice.readahead else {}
+                store = ChunkStore.open(
+                    root, backend=make_backend(choice.backend, **kw)
+                )
+            else:
+                store = ChunkStore.open(root, backend=args.backend)
+            if limit is None:
+                limit = choice.cache_limit_bytes
+        else:
+            store = ChunkStore.open(root, backend=args.backend or "vfs")
+        admission = None
+        if args.admission_mb_s is not None or args.admission_mode is not None:
+            bw = (
+                args.admission_mb_s * 1e6
+                if args.admission_mb_s is not None else tuned_bw
+            )
+            if bw is None:
+                ap.error("--admission-mode needs --admission-mb-s or "
+                         "--autotune (to measure the bandwidth budget)")
+            if args.compute_per_step <= 0:
+                ap.error("admission control needs --compute-per-step > 0 "
+                         "(predicted read rate is bytes per compute-second)")
+            admission = AdmissionControl(
+                bandwidth_bytes_per_s=bw,
+                compute_per_step_s=args.compute_per_step,
+                mode=args.admission_mode or "reject",
+            )
+            print(f"admission: {admission.mode} over "
+                  f"{bw / 1e6:.1f} MB/s budget")
         resuming = (
             resume_dir is not None
             and (resume_dir / "service_manifest.json").exists()
@@ -106,7 +167,9 @@ def main(argv=None) -> int:
                   f"{start_epoch} from {resume_dir}")
         else:
             svc = DataService(store, cache_limit_bytes=limit,
-                              co_refill=args.co_refill)
+                              co_refill=args.co_refill,
+                              eviction=args.eviction,
+                              admission=admission)
             start_epoch = 0
 
         if args.serve is not None:
@@ -172,12 +235,14 @@ def main(argv=None) -> int:
                   f"shared={st['shared_bytes']/1e6:.1f}MB "
                   f"(hits={st['shared_hits']}, co_refill={st['co_refill_hits']})")
         saved = agg["shared_bytes"]
+        svc_rec = rep["service"]
         print(f"aggregate: demand={demand/1e6:.1f}MB "
               f"physical={agg['physical_bytes']/1e6:.1f}MB "
               f"dup_loads_avoided={agg['dup_loads_avoided']} "
               f"saved={saved/1e6:.1f}MB "
-              f"peak_cache={agg['peak_cache_bytes']/1e6:.1f}MB "
-              f"evictions={agg['evictions']}")
+              f"peak_cache={svc_rec['peak_cache_bytes']/1e6:.1f}MB "
+              f"evictions={svc_rec['evictions']} "
+              f"({svc_rec['eviction']}, bypass={svc_rec['cache_bypass']})")
         if args.metrics:
             reg = service_metrics(svc)
             for j, st in svc.residency.per_job_stats.items():

@@ -39,6 +39,7 @@ from ..optim.optimizers import make_optimizer
 from ..service.transport import RedoxClient
 from ..train.train_step import build_train_step, init_train_state
 from .cli import (
+    add_autotune_args,
     add_data_plane_args,
     add_device_args,
     add_elastic_args,
@@ -60,6 +61,7 @@ def build_parser() -> argparse.ArgumentParser:
     add_data_plane_args(ap, batch=8, seq_len=128, num_docs=1024)
     add_device_args(ap)
     add_elastic_args(ap)
+    add_autotune_args(ap)
     add_obs_args(ap)
     ap.add_argument("--data-server", metavar="SOCKET", default=None,
                     help="consume batches from a repro.launch.data_service "
@@ -153,6 +155,30 @@ def main() -> int:
         if args.backend is not None:
             store.close()
             store = ChunkStore.open(workdir / "chunks", backend=args.backend)
+        elif args.autotune:
+            # Calibrate the freshly built store and reopen it with the
+            # model-selected backend + readahead (DESIGN.md §14). An
+            # explicit --backend wins over the autotuner (branch above).
+            from .. import autotune
+            from ..core.storage import make_backend
+
+            steps_hint = max(args.num_docs // max(args.batch, 1), 1)
+            _, choice = autotune.tune_store(
+                workdir / "chunks",
+                compute_per_step_s=args.compute_per_step,
+                num_steps=steps_hint,
+                memory_limit_bytes=(
+                    int(args.autotune_memory_mb * 1e6)
+                    if args.autotune_memory_mb is not None else None
+                ),
+            )
+            print(f"autotune: {choice.describe()}")
+            store.close()
+            kwargs = {"readahead": choice.readahead} if choice.readahead else {}
+            store = ChunkStore.open(
+                workdir / "chunks",
+                backend=make_backend(choice.backend, **kwargs),
+            )
         if data_dir is not None and (data_dir / "loader_manifest.json").exists():
             loader = RedoxLoader.resume(data_dir, store)
             print(f"data plane resumed at epoch {loader.resume_point[0]} "

@@ -18,7 +18,12 @@ Out-of-process serving (:mod:`repro.service.transport`)::
 """
 
 from .residency import SharedResidency, session_still_needs
-from .service import DataService, JobSession
+from .service import (
+    AdmissionControl,
+    AdmissionRejected,
+    DataService,
+    JobSession,
+)
 from .transport import (
     DataServiceServer,
     RedoxClient,
@@ -28,6 +33,8 @@ from .transport import (
 )
 
 __all__ = [
+    "AdmissionControl",
+    "AdmissionRejected",
     "DataService",
     "DataServiceServer",
     "JobSession",

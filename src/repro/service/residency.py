@@ -26,15 +26,30 @@ Two release disciplines, matching the service's two execution modes:
   ``cache_limit_bytes`` when that matters. Replay sessions (the default
   engine) use the exact planned refcounts instead.
 
-An optional ``cache_limit_bytes`` bounds residency; over-limit inserts evict
-least-recently-claimed entries (their remaining claims fall back to physical
-re-reads, counted in :class:`ServiceStats.evictions`).
+**Byte cap + clairvoyant eviction.** An optional ``cache_limit_bytes``
+bounds residency. When the cap bites, the default ``eviction="belady"``
+policy runs Belady/MIN against the *next-use index*: the service installs
+the merged multi-job claim schedule (:meth:`install_schedule` — the same
+``merge_read_schedules`` order that drives backend readahead), positions
+drain as claims are served, and the evicted entry is the one whose next
+planned claim is farthest in the future. Entries with *no* planned next use
+(live-mode liveness retention, or drained/unwound plans) are farthest of
+all and are evicted first, least-recently-claimed among themselves — so a
+live-only service degrades exactly to LRU, and ``eviction="lru"`` forces
+that behaviour everywhere (the differential baseline for
+``benchmarks/eviction.py``). Belady also gates *admission*: an incoming
+chunk whose own next use is farther than every resident's is not cached at
+all (evicting a sooner-needed chunk for it could only lose). Evicted
+claims fall back to physical re-reads (``ServiceStats.evictions``,
+attributed to the claiming job); refused inserts are counted as
+``ServiceStats.cache_bypass`` — never silently dropped.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 
 import numpy as np
 
@@ -43,6 +58,11 @@ from repro.obs import tracer as trace
 from ..core.stats import ServiceStats
 
 __all__ = ["SharedResidency", "session_still_needs"]
+
+#: Epoch stride in schedule positions: positions are ``epoch * _EPOCH_STRIDE
+#: + index``, so claims of epoch ``e`` always rank before epoch ``e+1``'s
+#: (the pump runs epochs in order) while staying plain ints.
+_EPOCH_STRIDE = 1 << 40
 
 
 def session_still_needs(cluster, chunk: int) -> bool:
@@ -78,9 +98,20 @@ class _Entry:
 class SharedResidency:
     """Refcount/liveness-managed chunk-byte cache shared by all sessions."""
 
-    def __init__(self, store, *, cache_limit_bytes: "int | None" = None):
+    def __init__(
+        self,
+        store,
+        *,
+        cache_limit_bytes: "int | None" = None,
+        eviction: str = "belady",
+    ):
+        if eviction not in ("belady", "lru"):
+            raise ValueError(
+                f"unknown eviction policy {eviction!r}; expected 'belady' or 'lru'"
+            )
         self.store = store
         self.cache_limit_bytes = cache_limit_bytes
+        self.eviction = eviction
         self._entries: "dict[int, _Entry]" = {}
         self._inflight: "dict[int, threading.Event]" = {}
         self._lock = threading.RLock()
@@ -91,12 +122,27 @@ class SharedResidency:
         # so cross-epoch refs sharing the one _refs map is correct).
         self._refs: "dict[int, int]" = {}
         self._claims_left: "dict[tuple, dict[int, int]]" = {}
+        # Next-use index (Belady): per chunk, the ascending schedule
+        # positions of its future planned claims, drained head-first as
+        # claims are served. Installed per epoch from the merged multi-job
+        # claim order; a chunk absent here has no planned next use.
+        self._next_use: "dict[int, deque[int]]" = {}
+        self._sched_epochs: "set[int]" = set()
+        #: Planned claims served so far (positions drained). Exposed for the
+        #: eviction property tests, which replay the schedule offline.
+        self.claims_drained = 0
+        #: When set to a list (tests/benchmarks), every eviction decision is
+        #: appended as a dict: victim, its next-use position, the incoming
+        #: chunk + position, the residents' positions, and claims_drained —
+        #: enough to check the choice against the ground-truth future.
+        self.eviction_log: "list[dict] | None" = None
         # Live mode: callback(chunk) -> True while any live session needs it.
         self._liveness = None
         self._seq = 0
         self.cache_bytes = 0
         self.peak_cache_bytes = 0
         self.evictions = 0
+        self.cache_bypass = 0
         self._job_stats: "dict[object, ServiceStats]" = {}
 
     # ------------------------------------------------------------ bookkeeping
@@ -129,6 +175,30 @@ class SharedResidency:
             if key in self._claims_left:
                 return
             self._install_pool_locked(key, counts)
+
+    def install_schedule(self, epoch: int, claims: "list[int]") -> None:
+        """Register the merged multi-job claim *order* for ``epoch`` — the
+        Belady next-use index. ``claims`` is ``merge_read_schedules``'s
+        output: every planned claim of every replay session, duplicates
+        included, in pump lockstep order. Keep-first per epoch, mirroring
+        :meth:`install_claims`: a re-plan of an epoch whose schedule is
+        already draining must not duplicate positions. The epoch is retired
+        (and reinstallable) once no claim pool for it remains — the
+        end-of-epoch sweep handles that."""
+        epoch = int(epoch)
+        with self._lock:
+            if epoch in self._sched_epochs:
+                return
+            self._sched_epochs.add(epoch)
+            base = epoch * _EPOCH_STRIDE
+            for i, k in enumerate(claims):
+                self._next_use.setdefault(int(k), deque()).append(base + i)
+
+    def next_use(self, chunk: int) -> "int | None":
+        """The chunk's next planned claim position (None: no planned use)."""
+        with self._lock:
+            d = self._next_use.get(int(chunk))
+            return int(d[0]) if d else None
 
     def begin_epoch_claims(self, job, epoch: int, counts: "dict[int, int]") -> None:
         """Atomically retire ``job``'s claim pools up to and including the
@@ -234,7 +304,7 @@ class SharedResidency:
             st.physical_bytes += nbytes
             self._inflight.pop(chunk, None)
             if self._retain_locked(chunk):
-                self._insert_locked(chunk, records, nbytes)
+                self._insert_locked(job, chunk, records, nbytes)
             ev.set()
         if tracer is not None:
             tracer.complete(
@@ -256,6 +326,16 @@ class SharedResidency:
             self._refs[chunk] = left
         else:
             self._refs.pop(chunk, None)
+        # Drain the next-use index in step with the claims. Positions are
+        # popped smallest-first per chunk — claims of the same chunk are
+        # interchangeable across jobs, so per-job attribution of positions
+        # is unnecessary.
+        d = self._next_use.get(chunk)
+        if d:
+            d.popleft()
+            if not d:
+                del self._next_use[chunk]
+        self.claims_drained += 1
 
     def _retain_locked(self, chunk: int) -> bool:
         if self._refs.get(chunk, 0) > 0:
@@ -269,18 +349,92 @@ class SharedResidency:
     def _sweep_locked(self) -> None:
         for chunk in list(self._entries):
             self._maybe_release_locked(chunk)
+        # Prune the next-use index: positions of chunks with no outstanding
+        # planned claims are stale by definition (their pools drained or
+        # were unwound). Epochs with no remaining pool are retired so a
+        # re-run of the same epoch reinstalls a fresh schedule.
+        for chunk in [k for k, _ in self._next_use.items()
+                      if self._refs.get(k, 0) == 0]:
+            del self._next_use[chunk]
+        if self._sched_epochs:
+            active = {key[1] for key in self._claims_left}
+            self._sched_epochs &= active
 
-    def _insert_locked(self, chunk: int, records, nbytes: int) -> None:
+    # ------------------------------------------------------------- eviction
+    def _next_pos_locked(self, chunk: int) -> "int | None":
+        d = self._next_use.get(chunk)
+        return d[0] if d else None
+
+    def _victim_locked(self) -> "tuple[int, int | None]":
+        """The entry the active policy evicts next.
+
+        * ``belady`` — farthest (or absent) next planned use wins; entries
+          with no planned use tie-break least-recently-claimed, so a
+          live-only cache (no schedule installed) degrades exactly to LRU.
+        * ``lru`` — least-recently-claimed, period (the differential
+          baseline).
+        """
+        if self.eviction == "lru":
+            victim = min(self._entries, key=lambda k: self._entries[k].seq)
+            return victim, self._next_pos_locked(victim)
+        best_key, victim, victim_next = None, None, None
+        for k, e in self._entries.items():
+            nxt = self._next_pos_locked(k)
+            # Rank: absent next use beats any position; among absents the
+            # smallest seq (least-recently-claimed) wins; among planned
+            # entries the farthest position wins.
+            key = (1, -e.seq) if nxt is None else (0, nxt)
+            if best_key is None or key > best_key:
+                best_key, victim, victim_next = key, k, nxt
+        return victim, victim_next
+
+    def _bypass_locked(self, st: ServiceStats, chunk: int, reason: str) -> None:
+        """Account a refused insert — never a silent drop (DESIGN §13)."""
+        self.cache_bypass += 1
+        st.cache_bypass += 1
+        trace.instant("residency.cache_bypass", "read", chunk=chunk, reason=reason)
+
+    def _insert_locked(self, job, chunk: int, records, nbytes: int) -> None:
+        st = self.job_stats(job)
         limit = self.cache_limit_bytes
         if limit is not None:
             if nbytes > limit:
-                return  # a single chunk over the whole budget: never cache
+                # a single chunk over the whole budget: never cacheable
+                self._bypass_locked(st, chunk, "oversized")
+                return
+            incoming_next = self._next_pos_locked(chunk)
             while self._entries and self.cache_bytes + nbytes > limit:
-                lru = min(self._entries, key=lambda k: self._entries[k].seq)
-                self.cache_bytes -= self._entries.pop(lru).nbytes
+                victim, victim_next = self._victim_locked()
+                if self.eviction == "belady" and victim_next is not None and (
+                    incoming_next is None or victim_next < incoming_next
+                ):
+                    # Every resident (the farthest included) is needed
+                    # sooner than the incoming chunk: admitting it could
+                    # only trade a nearer hit for a farther one. Serve the
+                    # claim uncached instead.
+                    self._bypass_locked(st, chunk, "farther_next_use")
+                    return
+                if self.eviction_log is not None:
+                    self.eviction_log.append({
+                        "victim": victim,
+                        "victim_next": victim_next,
+                        "incoming": chunk,
+                        "incoming_next": incoming_next,
+                        "residents": {
+                            k: self._next_pos_locked(k) for k in self._entries
+                        },
+                        "claims_drained": self.claims_drained,
+                        "by": job,
+                    })
+                self.cache_bytes -= self._entries.pop(victim).nbytes
                 self.evictions += 1
-                trace.instant("residency.evict", "read", chunk=lru)
+                st.evictions += 1  # attributed to the claiming job
+                trace.instant(
+                    "residency.evict", "read",
+                    chunk=victim, by=str(job), policy=self.eviction,
+                )
             if self.cache_bytes + nbytes > limit:
+                self._bypass_locked(st, chunk, "over_limit")
                 return
         self._seq += 1
         self._entries[chunk] = _Entry(records, nbytes, self._seq)

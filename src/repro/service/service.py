@@ -40,6 +40,7 @@ the residency.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import threading
 import time
@@ -57,9 +58,55 @@ from ..core.stats import ServiceStats
 from ..core.storage import first_read_order, merge_read_schedules
 from .residency import SharedResidency, session_still_needs
 
-__all__ = ["DataService", "JobSession"]
+__all__ = [
+    "AdmissionControl",
+    "AdmissionRejected",
+    "DataService",
+    "JobSession",
+]
 
 SERVICE_MANIFEST = "service_manifest.json"
+
+
+class AdmissionRejected(RuntimeError):
+    """``open_session`` refused: admitting the job would push the service's
+    predicted aggregate read rate past the storage budget (DESIGN.md §14).
+    Relayed typed over the transport wire, so a remote trainer catches
+    exactly this class."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionControl:
+    """Storage-bandwidth admission policy for :meth:`DataService.open_session`.
+
+    Redox reads every file exactly once per epoch, so a session's steady
+    demand is a pure function of known quantities: the dataset's chunk
+    bytes spread over its ``steps_per_epoch`` training steps, one step per
+    ``compute_per_step_s`` (the job's measured or modelled step time —
+    ``repro.autotune.calibrate`` measures both this and the bandwidth). A
+    session is admitted iff
+
+        Σ_admitted epoch_bytes / (steps * compute_per_step_s)  ≤  bandwidth
+
+    The estimate deliberately ignores shared-cache hits — overlap between
+    jobs only *lowers* the physical rate, so this is a safe upper bound.
+
+    ``mode="reject"`` raises :class:`AdmissionRejected` immediately;
+    ``mode="queue"`` blocks up to ``queue_timeout_s`` for capacity to free
+    (sessions closing), then raises the same typed error.
+    """
+
+    bandwidth_bytes_per_s: float
+    compute_per_step_s: float
+    mode: str = "reject"            # "reject" | "queue"
+    queue_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.mode not in ("reject", "queue"):
+            raise ValueError(
+                f"unknown admission mode {self.mode!r}; "
+                "expected 'reject' or 'queue'"
+            )
 
 
 class _SessionStore:
@@ -208,11 +255,16 @@ class DataService:
         *,
         cache_limit_bytes: "int | None" = None,
         co_refill: bool = False,
+        eviction: str = "belady",
+        admission: "AdmissionControl | None" = None,
     ):
         self.store = store
         self.plan = store.plan
         self.co_refill = co_refill
-        self.residency = SharedResidency(store, cache_limit_bytes=cache_limit_bytes)
+        self.admission = admission
+        self.residency = SharedResidency(
+            store, cache_limit_bytes=cache_limit_bytes, eviction=eviction
+        )
         self.residency.set_liveness(self._live_sessions_need)
         # Serialises planning and claim (un)installs: sessions consumed from
         # concurrent threads must not interleave plan_epoch runs.
@@ -222,6 +274,10 @@ class DataService:
         # re-runs reuse them); only the newest few epochs are kept.
         self._epoch_plans: "dict[int, dict[object, EpochPlan]]" = {}
         self._active_epoch: "dict[object, int]" = {}
+        # Admission bookkeeping: predicted bytes/s per admitted job, and a
+        # condition close_session notifies so queued opens can re-check.
+        self._admitted_rates: "dict[object, float]" = {}
+        self._admission_cv = threading.Condition()
         self.last_plan_time_s = 0.0
 
     # ------------------------------------------------------------- sessions
@@ -267,6 +323,8 @@ class DataService:
             loader = RedoxLoader.resume(resume_from, _SessionStore(self, job_id))
         else:
             loader = RedoxLoader.from_spec(spec, _SessionStore(self, job_id))
+        if self.admission is not None:
+            self._admit(job_id, loader)  # raises AdmissionRejected
         session = JobSession(
             self, job_id, loader.cluster, loader.sampler, loader
         )
@@ -282,6 +340,65 @@ class DataService:
             self._sessions = {**self._sessions, job_id: session}
         self.residency.job_stats(job_id)  # materialise the per-job counters
         return session
+
+    # ------------------------------------------------------------ admission
+    def _session_rate(self, loader) -> float:
+        """Predicted steady read demand of one session, bytes/s: the dataset
+        read exactly once per epoch (the Redox invariant), spread over the
+        session's steps at the admission policy's per-step compute time."""
+        steps = loader.steps_per_epoch(0)
+        if steps <= 0:
+            return 0.0
+        epoch_bytes = float(np.asarray(self.plan.chunk_bytes).sum())
+        return epoch_bytes / (steps * self.admission.compute_per_step_s)
+
+    def _admit(self, job_id, loader) -> None:
+        adm = self.admission
+        rate = self._session_rate(loader)
+        deadline = time.monotonic() + adm.queue_timeout_s
+        with self._admission_cv:
+            while True:
+                admitted = sum(self._admitted_rates.values())
+                if admitted + rate <= adm.bandwidth_bytes_per_s:
+                    self._admitted_rates[job_id] = rate
+                    trace.instant(
+                        "service.admit", "service", job=str(job_id),
+                        rate=rate, admitted=admitted + rate,
+                    )
+                    return
+                detail = (
+                    f"job {job_id!r} needs {rate / 1e6:.1f} MB/s; "
+                    f"{admitted / 1e6:.1f} MB/s of the "
+                    f"{adm.bandwidth_bytes_per_s / 1e6:.1f} MB/s storage "
+                    f"budget is already committed to "
+                    f"{len(self._admitted_rates)} job(s)"
+                )
+                remaining = deadline - time.monotonic()
+                if adm.mode == "reject" or remaining <= 0:
+                    trace.instant(
+                        "service.admission_rejected", "service",
+                        job=str(job_id), rate=rate, admitted=admitted,
+                    )
+                    queued = "" if adm.mode == "reject" else (
+                        f" (queued {adm.queue_timeout_s:.0f}s without "
+                        f"capacity freeing)"
+                    )
+                    raise AdmissionRejected(detail + queued)
+                self._admission_cv.wait(timeout=min(remaining, 0.5))
+
+    def admission_report(self) -> "dict | None":
+        """The admission plane's live view (None when admission is off)."""
+        if self.admission is None:
+            return None
+        with self._admission_cv:
+            rates = dict(self._admitted_rates)
+        return {
+            "bandwidth_bytes_per_s": self.admission.bandwidth_bytes_per_s,
+            "compute_per_step_s": self.admission.compute_per_step_s,
+            "mode": self.admission.mode,
+            "admitted_bytes_per_s": sum(rates.values()),
+            "per_job_bytes_per_s": {str(j): r for j, r in rates.items()},
+        }
 
     def close_session(self, job_id) -> None:
         """Close a session (mid-epoch kills included): its outstanding claim
@@ -300,6 +417,9 @@ class DataService:
             for plans in self._epoch_plans.values():
                 plans.pop(job_id, None)
             self.residency.drop_claims(job_id)
+        with self._admission_cv:
+            if self._admitted_rates.pop(job_id, None) is not None:
+                self._admission_cv.notify_all()  # wake queued open_sessions
 
     @property
     def sessions(self) -> "list[JobSession]":
@@ -441,6 +561,10 @@ class DataService:
                 [_per_step_chunks(plans[s.job_id]) for s in sessions
                  if s.job_id in plans]
             )
+            # The same merged order, duplicates included, is the Belady
+            # next-use index: the residency drains it claim by claim and
+            # always knows each resident chunk's next planned use.
+            self.residency.install_schedule(epoch, claims)
             for s in sessions:
                 if s.job_id in plans:
                     self.residency.install_claims(
@@ -734,18 +858,31 @@ class DataService:
 
     # ---------------------------------------------------------------- stats
     def aggregate_stats(self) -> ServiceStats:
+        """Whole-service counters. Evictions and cache bypasses are
+        attributed to the claiming job at the point of decision (the insert
+        that forced them), so the per-job merge sums to the service totals —
+        no global overwrite, no K-fold double count when a consumer sums the
+        per-job reports. ``peak_cache_bytes`` is the one genuinely
+        service-global quantity (cache residency is shared), so it comes
+        from the residency, not from max-ing per-job copies (which are 0)."""
         out = ServiceStats()
         for st in self.residency.per_job_stats.values():
             out = out.merge(st)
         out.peak_cache_bytes = self.residency.peak_cache_bytes
-        out.evictions = self.residency.evictions
         return out
 
     def stats_report(self) -> dict:
-        """Per-job and aggregate counters (the BENCH/CLI-facing view)."""
+        """Per-job and aggregate counters (the BENCH/CLI-facing view).
+
+        ``per_job`` holds only what each job caused (its evictions are the
+        ones *its* inserts forced); cache-wide state lives in the distinct
+        ``service`` record, so summing per-job rows never double-counts
+        cache pressure.
+        """
         per_job = self.residency.per_job_stats
         agg = self.aggregate_stats()
-        return {
+        res = self.residency
+        report = {
             "per_job": {str(j): st.to_dict() for j, st in per_job.items()},
             "bytes_per_job": {
                 str(j): st.physical_bytes + st.shared_bytes
@@ -756,7 +893,19 @@ class DataService:
             "aggregate": {
                 **agg.to_dict(), "dup_loads_avoided": agg.dup_loads_avoided,
             },
+            "service": {
+                "eviction": res.eviction,
+                "evictions": res.evictions,
+                "cache_bypass": res.cache_bypass,
+                "cache_bytes": res.cache_bytes,
+                "peak_cache_bytes": res.peak_cache_bytes,
+                "cache_limit_bytes": res.cache_limit_bytes,
+            },
         }
+        admission = self.admission_report()
+        if admission is not None:
+            report["admission"] = admission
+        return report
 
 
 class _JointRecorder(PlanRecorder):

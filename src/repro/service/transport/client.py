@@ -180,6 +180,12 @@ class RedoxClient:
     def stats(self) -> dict:
         return self._rpc({"op": "stats"})["stats"]
 
+    def admission(self) -> "dict | None":
+        """The server's admission-control view (None when admission is off).
+        An over-budget ``open_session`` raises
+        :class:`repro.service.AdmissionRejected` typed on this side."""
+        return self._rpc({"op": "admission"})["admission"]
+
     def metrics(self) -> dict:
         """Scrape the live server: ``{"metrics": flat snapshot,
         "text": Prometheus exposition}`` (see ``repro.obs.MetricsRegistry``)."""

@@ -368,6 +368,10 @@ class DataServiceServer:
             return {"ok": True, "planned": len(plans)}, job_id
         if op == "stats":
             return {"ok": True, "stats": self.service.stats_report()}, job_id
+        if op == "admission":
+            return {
+                "ok": True, "admission": self.service.admission_report(),
+            }, job_id
         if op == "metrics":
             return self._op_metrics(), job_id
         if op == "trace_dump":
@@ -492,6 +496,7 @@ def service_metrics(service: DataService) -> MetricsRegistry:
         "cache_bytes": service.residency.cache_bytes,
         "peak_cache_bytes": service.residency.peak_cache_bytes,
         "evictions": service.residency.evictions,
+        "cache_bypass": service.residency.cache_bypass,
         "open_sessions": len(service.sessions),
     })
     return reg

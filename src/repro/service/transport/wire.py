@@ -44,15 +44,30 @@ class SessionClosed(TransportError):
     declared dead and reaped)."""
 
 
+def _admission_rejected():
+    # Deferred: wire.py is imported while repro.service's own __init__ is
+    # still executing; by the time an error is folded or raised the service
+    # module is fully loaded.
+    from ..service import AdmissionRejected
+
+    return AdmissionRejected
+
+
 _KINDS = {
     "TransportError": TransportError,
     "ServiceSuspended": ServiceSuspended,
     "SessionClosed": SessionClosed,
+    "AdmissionRejected": _admission_rejected,
     "ValueError": ValueError,
     "KeyError": KeyError,
     "TypeError": TypeError,
     "RuntimeError": RuntimeError,
 }
+
+
+def _kind_class(kind):
+    cls = _KINDS.get(kind, TransportError)
+    return cls() if not isinstance(cls, type) else cls
 
 
 def error_response(exc: BaseException) -> dict:
@@ -65,7 +80,7 @@ def error_response(exc: BaseException) -> dict:
 
 def raise_for(resp: dict):
     """Client side: raise the exception a ``{"ok": false}`` response names."""
-    raise _KINDS.get(resp.get("kind"), TransportError)(
+    raise _kind_class(resp.get("kind"))(
         resp.get("error", "unknown server error")
     )
 
