@@ -1,0 +1,153 @@
+"""Compressed & progressive chunk storage: physical bytes vs epoch parity.
+
+Builds the SAME dataset three ways — raw, zlib-framed, lz4-framed — and
+serves one full-fidelity ``RedoxLoader`` epoch per storage backend from
+each. Two claims ride on every row pair (DESIGN.md §15):
+
+* **strictly fewer physical bytes**: the backend's ``bytes_read`` on a
+  compressed store (frames straight off disk; decode happens above the
+  backend or on its worker pool) is below the raw store's, per backend;
+* **byte-identical stream**: at full fidelity the token/returned stream
+  the trainer consumes is exactly the raw store's — compression is a
+  byte-representation choice, never a semantics one.
+
+A final set of rows reads the zlib store at ``fidelity=1`` — the
+truncated-prefix mode the autotuner picks for I/O-bound jobs — reporting
+how far the *logical* bytes drop below full fidelity.
+
+The advisory CI check rides on ``main()``'s asserts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core import ChunkStore, RedoxLoader, SessionSpec
+from repro.data import SyntheticTokenDataset
+
+from .common import BACKEND_NAMES
+
+#: (label, build kwargs) — raw first: it is the parity reference.
+VARIANTS = (
+    ("raw", {}),
+    ("zlib", {"codec": "zlib", "bands": 2}),
+    ("lz4", {"codec": "lz4", "bands": 2}),
+)
+
+
+def _build_variants(base: Path, *, num_docs: int, mean_len: int,
+                    seed: int) -> "dict[str, Path]":
+    ds = SyntheticTokenDataset(num_docs, vocab_size=512, mean_len=mean_len,
+                               seed=seed)
+    roots = {}
+    for label, kwargs in VARIANTS:
+        root = base / label
+        ds.build_store(root, 4, num_slots=16, seed=seed + 1, **kwargs).close()
+        roots[label] = root
+    return roots
+
+
+def _epoch(root: Path, backend: str, spec: SessionSpec) -> dict:
+    """One epoch; returns the stream digest + physical/logical byte rows."""
+    store = ChunkStore.open(root, backend=backend)
+    loader = RedoxLoader.from_spec(spec, store)
+    digest = hashlib.sha256()
+    logical = 0
+    t0 = time.perf_counter()
+    for batch in loader.epoch_async(0):
+        digest.update(batch["tokens"].tobytes())
+        digest.update(batch["returned"].tobytes())
+        logical += int(batch["loss_mask"].sum()) * 4
+    wall = time.perf_counter() - t0
+    st = store.backend_stats
+    disk = sum(
+        store.chunk_path(k).stat().st_size for k in range(store.plan.num_chunks)
+    )
+    row = dict(
+        physical_mb=st.bytes_read / 1e6,
+        disk_mb=disk / 1e6,
+        logical_mb=logical / 1e6,
+        decode_s=st.decode_seconds,
+        wall_s=wall,
+        digest=digest.hexdigest(),
+    )
+    store.close()
+    return row
+
+
+def run_grid(*, num_docs: int = 384, mean_len: int = 48,
+             seed: int = 5) -> "list[dict]":
+    """One row per (variant, backend) at full fidelity, plus a
+    ``fidelity=1`` row per backend on the zlib store."""
+    spec = SessionSpec(seed=2, sampler_seed=4, batch_per_node=16, seq_len=64)
+    rows: "list[dict]" = []
+    with tempfile.TemporaryDirectory(prefix="redox_compress_") as tmp:
+        roots = _build_variants(Path(tmp), num_docs=num_docs,
+                                mean_len=mean_len, seed=seed)
+        for label, _ in VARIANTS:
+            for backend in BACKEND_NAMES:
+                r = _epoch(roots[label], backend, spec)
+                r.update(variant=label, backend=backend, fidelity="full")
+                rows.append(r)
+        lo = SessionSpec(seed=2, sampler_seed=4, batch_per_node=16,
+                         seq_len=64, fidelity=1)
+        for backend in BACKEND_NAMES:
+            r = _epoch(roots["zlib"], backend, lo)
+            r.update(variant="zlib", backend=backend, fidelity="1/2")
+            rows.append(r)
+    return rows
+
+
+def print_table(rows: "list[dict]") -> None:
+    print(
+        f"{'variant':>8s} {'backend':>8s} {'fid':>4s} {'disk_MB':>8s} "
+        f"{'phys_MB':>8s} {'logic_MB':>8s} {'decode_s':>8s} {'wall_s':>7s}"
+    )
+    for r in rows:
+        print(
+            f"{r['variant']:>8s} {r['backend']:>8s} {r['fidelity']:>4s} "
+            f"{r['disk_mb']:8.2f} {r['physical_mb']:8.2f} "
+            f"{r['logical_mb']:8.2f} {r['decode_s']:8.3f} {r['wall_s']:7.2f}"
+        )
+
+
+def main(quick: bool = False) -> "list[dict]":
+    rows = run_grid(num_docs=192 if quick else 384)
+    print_table(rows)
+    ref = {
+        r["backend"]: r for r in rows
+        if r["variant"] == "raw" and r["fidelity"] == "full"
+    }
+    for r in rows:
+        if r["fidelity"] != "full":
+            continue
+        base = ref[r["backend"]]
+        assert r["digest"] == base["digest"], (
+            f"{r['variant']}/{r['backend']}: full-fidelity stream is NOT "
+            f"byte-identical to raw"
+        )
+        if r["variant"] != "raw":
+            assert r["physical_mb"] < base["physical_mb"], (
+                f"{r['variant']}/{r['backend']}: compressed read "
+                f"{r['physical_mb']:.2f}MB, raw read "
+                f"{base['physical_mb']:.2f}MB — no physical saving"
+            )
+    for r in rows:
+        if r["fidelity"] == "full":
+            continue
+        assert r["logical_mb"] < ref[r["backend"]]["logical_mb"], (
+            f"truncated fidelity served no fewer logical bytes on "
+            f"{r['backend']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -32,6 +32,7 @@ def main() -> None:
     from . import (
         breakdown,
         chunk_size,
+        compression,
         convergence,
         device_path,
         eviction,
@@ -105,6 +106,11 @@ def main() -> None:
         "Belady vs LRU eviction under shared-cache byte caps",
         lambda: eviction.main(quick=args.quick),
         key="eviction",
+    )
+    section(
+        "Compressed & progressive storage: physical bytes vs epoch parity",
+        lambda: compression.main(quick=args.quick),
+        key="compression",
     )
     section(
         "Out-of-process transport: ring throughput + batch latency",

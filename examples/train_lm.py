@@ -23,7 +23,7 @@ from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore_checkp
 from repro.configs import ARCHS, RunConfig, reduced
 from repro.core import Cluster, EpochSampler, RedoxLoader
 from repro.data import SyntheticTokenDataset
-from repro.launch.cli import add_device_args
+from repro.launch.cli import add_device_args, add_storage_args
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.train.train_step import build_train_step, init_train_state
@@ -39,17 +39,20 @@ PRESETS = {
 }
 
 
-def main():
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--preset", default="small", choices=list(PRESETS))
     ap.add_argument("--nodes", type=int, default=2)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--workdir", default=None)
-    ap.add_argument("--backend", default="vfs", choices=("vfs", "mmap", "parallel"),
-                    help="storage backend serving chunk reads")
+    add_storage_args(ap)
     add_device_args(ap)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     p = PRESETS[args.preset]
     cfg = dataclasses.replace(
@@ -65,8 +68,12 @@ def main():
     ds = SyntheticTokenDataset(p["num_docs"], cfg.vocab_size, mean_len=p["seq"] // 2, seed=5)
     store = ds.build_store(workdir / "chunks", chunk_size=16,
                            memory_bytes=ds.sizes_bytes.sum() // 4, seed=1,
-                           backend=args.backend)
-    print(f"storage backend: {store.backend.name}")
+                           backend=args.backend or "vfs",
+                           codec=args.codec, bands=args.bands)
+    if args.fidelity is not None:
+        store.default_fidelity = args.fidelity
+    print(f"storage backend: {store.backend.name} "
+          f"(codec {store.spec.codec}, {store.spec.bands} band(s))")
     cluster = Cluster(store.plan, args.nodes, store=store, seed=2,
                       remote_memory_limit_bytes=1_000_000)
     sampler = EpochSampler(p["num_docs"], args.nodes, seed=3)

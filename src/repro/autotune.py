@@ -19,7 +19,10 @@ pair against a per-step I/O demand profile and returns the argmin as a
 :class:`TuneChoice` — including the cache byte cap
 (:func:`required_cache_bytes`: the exact residency peak of a claim
 schedule under release-on-last-claim caching, i.e. the smallest cap that
-never forces an eviction). Both launchers expose this as ``--autotune``;
+never forces an eviction) and, on progressive stores, the fidelity
+prefix to read (:func:`select_fidelity`: full fidelity when the model
+predicts compute-bound, a truncated band prefix when I/O-bound). Both
+launchers expose this as ``--autotune``;
 the measured storage bandwidth also feeds the service's admission control
 (``repro.service.AdmissionControl``).
 
@@ -35,6 +38,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import time
 from pathlib import Path
 
@@ -52,6 +56,7 @@ __all__ = [
     "plan_step_io",
     "required_cache_bytes",
     "select_config",
+    "select_fidelity",
     "tune_store",
     "uniform_step_io",
 ]
@@ -122,6 +127,9 @@ class TuneChoice:
     cache_limit_bytes: "int | None"
     predicted_epoch_s: float
     model: PipelineTimeModel            # the fitted §6 model it was scored with
+    #: Fidelity bands to read from a progressive store (None: store is
+    #: flat, or full fidelity — see :func:`select_fidelity`).
+    fidelity: "int | None" = None
 
     def describe(self) -> str:
         cap = (
@@ -129,8 +137,9 @@ class TuneChoice:
             else f"{self.cache_limit_bytes / 1e6:.1f} MB cap"
         )
         ra = f", readahead {self.readahead}" if self.readahead else ""
+        fid = f", fidelity {self.fidelity}" if self.fidelity is not None else ""
         return (
-            f"backend={self.backend}{ra}, cache {cap}, "
+            f"backend={self.backend}{ra}, cache {cap}{fid}, "
             f"predicted epoch {self.predicted_epoch_s:.3f}s "
             f"(disk {self.model.disk_bw / 1e6:.0f} MB/s, "
             f"chunk {self.model.chunk_overhead * 1e3:.2f} ms)"
@@ -299,6 +308,33 @@ def uniform_step_io(
     ]
 
 
+def select_fidelity(
+    model: PipelineTimeModel,
+    step_io: "list[StepIO]",
+    compute_per_step_s: float,
+    bands: int,
+) -> int:
+    """How many fidelity bands of a progressive store to read (§6 model).
+
+    Paper §6 applied to progressive records (PAPERS.md, "Progressive
+    Compressed Records"): when the model predicts the job is
+    *compute-bound* (per-epoch I/O time fits under the compute time)
+    truncation buys nothing — return ``bands`` (full fidelity). When it
+    predicts *I/O-bound*, pick the largest prefix whose proportionally
+    shrunk read time fits the compute budget: I/O time scales ~linearly
+    with the byte prefix, so ``fidelity ≈ bands * compute/io``, floored
+    at one band so the epoch stream stays well-formed.
+    """
+    bands = max(int(bands), 1)
+    if bands == 1:
+        return 1
+    io = model.epoch_time_strict([list(step_io)], 0.0)
+    compute = compute_per_step_s * len(step_io)
+    if io <= compute or io <= 0:
+        return bands
+    return max(1, min(bands, math.ceil(bands * compute / io)))
+
+
 def select_config(
     calib: Calibration,
     step_io: "list[StepIO]",
@@ -309,6 +345,7 @@ def select_config(
     claims: "list[int] | None" = None,
     chunk_bytes=None,
     memory_limit_bytes: "int | None" = None,
+    bands: int = 1,
     net_bw: float = DEFAULT_NET_BW,
     net_latency: float = DEFAULT_NET_LATENCY,
 ) -> TuneChoice:
@@ -324,6 +361,11 @@ def select_config(
     The cache cap is :func:`required_cache_bytes` of ``claims`` when a
     claim schedule is known (clamped to ``memory_limit_bytes``), else
     ``memory_limit_bytes`` as given.
+
+    With ``bands > 1`` (a progressive store) the winning choice also
+    carries a :func:`select_fidelity` decision against its own fitted
+    model — full fidelity when compute-bound, a truncated prefix when
+    I/O-bound.
     """
     if not step_io:
         raise ValueError("select_config needs a non-empty per-step demand")
@@ -354,6 +396,13 @@ def select_config(
                     backend=name, readahead=depth, cache_limit_bytes=cap,
                     predicted_epoch_s=predicted, model=model,
                 )
+    if bands > 1 and best is not None:
+        best = dataclasses.replace(
+            best,
+            fidelity=select_fidelity(
+                best.model, grid, compute_per_step_s, bands
+            ),
+        )
     return best
 
 
@@ -370,7 +419,11 @@ def tune_store(
     plan-free uniform demand profile (the launcher entry point — both
     ``--autotune`` flags route through here)."""
     calib = calibrate(root, backends=backends)
-    plan = ChunkStore.open(root).plan
+    probe = ChunkStore.open(root)
+    try:
+        plan, bands = probe.plan, probe.spec.bands
+    finally:
+        probe.close()
     total = int(np.asarray(plan.chunk_bytes).sum())
     steps = int(num_steps) if num_steps else int(plan.num_chunks)
     choice = select_config(
@@ -380,6 +433,7 @@ def tune_store(
         backends=backends,
         readahead_grid=readahead_grid,
         memory_limit_bytes=memory_limit_bytes,
+        bands=bands,
     )
     return calib, choice
 

@@ -9,7 +9,7 @@ from .loader import RedoxLoader
 from .planner import EpochPlan, EpochPlanner
 from .protocol import LocalNode, RequestResult
 from .sampler import EpochSampler
-from .spec import SessionSpec
+from .spec import SessionSpec, StoreSpec
 from .stats import (
     DeviceStats,
     NodeStats,
@@ -20,12 +20,14 @@ from .stats import (
 )
 from .storage import (
     BACKENDS,
+    CODECS,
     BackendStats,
     ChunkStore,
     MmapBackend,
     ParallelBackend,
     StorageBackend,
     VFSBackend,
+    get_codec,
     make_backend,
 )
 
@@ -33,6 +35,7 @@ __all__ = [
     "AbstractMemory",
     "BACKENDS",
     "BackendStats",
+    "CODECS",
     "ChunkingPlan",
     "ChunkStore",
     "Cluster",
@@ -60,7 +63,9 @@ __all__ = [
     "SessionSpec",
     "StepIO",
     "StorageBackend",
+    "StoreSpec",
     "VFSBackend",
+    "get_codec",
     "make_backend",
 ]
 

@@ -123,6 +123,12 @@ class RedoxLoader:
         the same stack everywhere (a single-session service run is
         byte-identical to ``RedoxLoader.from_spec(spec, store)``).
         """
+        if spec.fidelity is not None:
+            # Progressive decode (DESIGN.md §15): the session owns its
+            # store handle (a real ChunkStore in-process, a per-session
+            # _SessionStore facade under the service), so setting its
+            # standing fidelity scopes truncation to this session.
+            store.default_fidelity = spec.fidelity
         cluster = Cluster(
             store.plan,
             spec.num_nodes,
@@ -164,6 +170,7 @@ class RedoxLoader:
             prefetch_window=self.cluster.prefetch_window,
             remote_memory_limit_bytes=self.cluster._remote_limit,
             queue_depth=self.queue_depth,
+            fidelity=getattr(self.cluster.store, "default_fidelity", None),
         )
 
     def steps_per_epoch(self, epoch: int = 0) -> int:

@@ -16,13 +16,20 @@ The legacy kwarg spellings (and the ``use_planner`` alias for
 ``engine``) remain as thin deprecation shims at each call site;
 ``tests/test_service.py`` asserts the shims and the spec form build
 identical sessions.
+
+:class:`StoreSpec` gives the *store* the same treatment (DESIGN.md §15):
+one frozen value object for storage configuration — backend + backend
+kwargs, codec, compression level, fidelity bands — persisted by
+``ChunkStore.build`` as ``store.json`` in the store root so
+``ChunkStore.open(root)`` needs no flags, and shipped over the wire so a
+remote trainer resolves the served store's codec without guessing.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["SessionSpec"]
+__all__ = ["SessionSpec", "StoreSpec"]
 
 _ENGINES = ("replay", "step", "per_access")
 
@@ -50,6 +57,9 @@ class SessionSpec:
     prefetch_window: int = 64
     remote_memory_limit_bytes: int = 1 << 62
     queue_depth: int = 2
+    #: Decode only the first ``fidelity`` bands of a progressive store
+    #: (None = full fidelity). Ignored by stores built with ``bands=1``.
+    fidelity: "int | None" = None
 
     def __post_init__(self):
         if self.engine not in _ENGINES:
@@ -61,6 +71,8 @@ class SessionSpec:
                 "num_nodes, batch_per_node and seq_len must be positive, got "
                 f"{self.num_nodes}/{self.batch_per_node}/{self.seq_len}"
             )
+        if self.fidelity is not None and self.fidelity < 1:
+            raise ValueError(f"fidelity must be >= 1, got {self.fidelity}")
 
     # --------------------------------------------------------------- derived
     @property
@@ -108,3 +120,84 @@ class SessionSpec:
         elif kwargs.get("engine") is None:
             kwargs.pop("engine", None)
         return cls.from_json(kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Frozen description of one chunk store's byte representation + backend.
+
+    ``codec``/``level``/``bands`` are *layout* properties — they describe
+    the bytes on disk, are fixed at build time, and round-trip through the
+    ``store.json`` sidecar. ``backend``/``backend_kwargs`` are the store's
+    *default* read path; an explicit ``backend=`` at ``ChunkStore.open``
+    may override them (a runtime choice), but a conflicting layout is
+    refused. ``bands > 1`` or ``codec != "none"`` selects the framed
+    progressive layout; the default spec is byte-identical to the legacy
+    raw concatenation.
+    """
+
+    backend: str = "vfs"
+    backend_kwargs: dict = dataclasses.field(default_factory=dict)
+    codec: str = "none"
+    level: int = -1
+    bands: int = 1
+
+    def __post_init__(self):
+        # Deferred import: repro.core.storage imports this module at load
+        # time; by the time a StoreSpec is constructed both are initialised.
+        from .storage.codec import CODECS
+
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"unknown codec {self.codec!r}; expected one of {sorted(CODECS)}"
+            )
+        if not isinstance(self.backend, str) or not self.backend:
+            raise ValueError(f"backend must be a backend name, got {self.backend!r}")
+        if not 1 <= self.bands <= 255:
+            raise ValueError(f"bands must be in 1..255, got {self.bands}")
+
+    # --------------------------------------------------------------- derived
+    @property
+    def framed(self) -> bool:
+        """True when chunk files carry the frame container (codec/bands)."""
+        return self.codec != "none" or self.bands > 1
+
+    def layout_fields(self) -> dict:
+        return {"codec": self.codec, "level": self.level, "bands": self.bands}
+
+    def replace(self, **changes) -> "StoreSpec":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------------ wire
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, data: dict) -> "StoreSpec":
+        """Inverse of :meth:`to_json`; unknown keys are rejected."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(data) - known
+        if extra:
+            raise ValueError(f"unknown StoreSpec fields: {sorted(extra)}")
+        data = dict(data)
+        data["backend_kwargs"] = dict(data.get("backend_kwargs") or {})
+        return cls(**data)
+
+    # ------------------------------------------------------------ kwarg shim
+    @classmethod
+    def from_kwargs(cls, backend="vfs", **kwargs) -> "StoreSpec":
+        """Build a spec from the legacy ``ChunkStore`` keyword spelling.
+
+        ``backend`` may be a name or a live :class:`StorageBackend`
+        instance (the historical call form) — an instance contributes its
+        ``name`` and the store keeps using the instance itself. Remaining
+        keywords are StoreSpec fields; anything else is a backend kwarg.
+        """
+        if not isinstance(backend, str):
+            backend = getattr(backend, "name", "vfs")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        spec_kw = {k: v for k, v in kwargs.items() if k in fields}
+        extra = {k: v for k, v in kwargs.items() if k not in fields}
+        if extra:
+            spec_kw.setdefault("backend_kwargs", {}).update(extra)
+        return cls(backend=backend, **spec_kw)

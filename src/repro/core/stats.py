@@ -122,12 +122,23 @@ class ServiceStats(StatsDict):
     is a duplicate disk read avoided (``dup_loads_avoided`` is the same
     quantity under the paper-facing name). ``physical_*`` are the reads that
     actually reached the storage backend on behalf of this job.
+
+    On a compressed store (DESIGN.md §15) the cache holds compressed
+    frames and every claim decodes its own copy, so the byte counters
+    split: ``physical_bytes``/``shared_bytes``/``peak_cache_bytes`` count
+    *physical* (compressed) bytes — what disk and cache capacity actually
+    see — while ``logical_bytes`` counts the decoded bytes handed to
+    sessions. Their ratio is the effective capacity multiplier the codec
+    buys; ``decode_claims``/``decode_s`` price what it costs.
     """
 
     physical_reads: int = 0    # chunk reads that hit the storage backend
-    physical_bytes: int = 0
+    physical_bytes: int = 0    # physical (on-disk, possibly compressed) bytes
     shared_hits: int = 0       # chunk claims served from the shared cache
-    shared_bytes: int = 0      # bytes of those claims (reads avoided)
+    shared_bytes: int = 0      # physical bytes of those claims (reads avoided)
+    logical_bytes: int = 0     # decoded record bytes handed to sessions
+    decode_claims: int = 0     # claims that ran a per-claim frame decode
+    decode_s: float = 0.0      # wall time spent in per-claim decodes
     co_refill_hits: int = 0    # refill choices steered by the co-refill hook
     evictions: int = 0         # cache-limit evictions (claims may re-read)
     cache_bypass: int = 0      # reads served but refused caching (cap pressure)

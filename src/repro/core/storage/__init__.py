@@ -14,9 +14,17 @@ parallel  threadpool reads + bounded readahead over an inner
 
 Select one with ``ChunkStore.open(root, backend="mmap")`` or pass an
 instance for custom tuning (``ParallelBackend(workers=8, readahead=16)``).
+
+Orthogonally to *how* bytes are read, ``codec.py`` decides *what* bytes
+sit on disk: per-chunk framed compression (``none``/``zlib``/``lz4``)
+with progressive fidelity bands, described by a frozen
+:class:`~repro.core.spec.StoreSpec` persisted as ``store.json`` — see
+DESIGN.md §15. ``ChunkStore.open(root)`` with no flags reopens any built
+store.
 """
 
 from .base import BackendStats, StorageBackend
+from .codec import CODECS, ChunkFrame, Codec, band_cuts, get_codec
 from .mapped import MmapBackend
 from .parallel import ParallelBackend
 from .store import (
@@ -31,12 +39,17 @@ from .vfs import VFSBackend
 __all__ = [
     "BACKENDS",
     "BackendStats",
+    "CODECS",
+    "ChunkFrame",
     "ChunkStore",
+    "Codec",
     "MmapBackend",
     "ParallelBackend",
     "StorageBackend",
     "VFSBackend",
+    "band_cuts",
     "first_read_order",
+    "get_codec",
     "make_backend",
     "merge_read_schedules",
 ]

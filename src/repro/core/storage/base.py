@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import time
 from pathlib import Path
 
 from repro.core.stats import StatsDict
@@ -55,6 +56,12 @@ class BackendStats(StatsDict):
     scheduled_issued: int = 0  # readahead reads submitted from an exact schedule
     scheduled_hits: int = 0    # read() calls served by the exact schedule
     peak_inflight: int = 0     # max concurrent background reads observed
+    # Codec layer (DESIGN.md §15): when a decoder is installed, bytes_read
+    # keeps counting *physical* (on-disk, possibly compressed) bytes, and
+    # the decode cost lands here — on a worker thread for the parallel
+    # backend (overlapped with disk I/O), inline for synchronous backends.
+    decode_seconds: float = 0.0  # time spent inside the installed decoder
+    decoded_bytes: int = 0       # logical bytes produced by eager decodes
 
     @property
     def blocked_seconds(self) -> float:
@@ -77,6 +84,35 @@ class StorageBackend(abc.ABC):
 
     def __init__(self) -> None:
         self.stats = BackendStats()
+        self._decoder = None
+
+    # --------------------------------------------------------------- decode
+    def set_decoder(self, fn) -> None:
+        """Install a post-read transform applied to every whole-file read.
+
+        ``fn(raw) -> payload`` runs wherever the physical read ran — on a
+        worker thread for async backends, so decompression overlaps disk
+        I/O; inline for synchronous ones. :meth:`read_range` is never
+        decoded (a ranged slice of a compressed frame is meaningless —
+        ``ChunkStore.read_file`` routes framed stores through a cached
+        whole-chunk decode instead).
+        """
+        self._decoder = fn
+
+    def _run_decoder(self, raw):
+        """``(payload, physical_nbytes, decode_s, decoded_nbytes)``.
+
+        Stats are returned, not applied — the caller folds them in under
+        its own stats lock.
+        """
+        nraw = memoryview(raw).nbytes
+        if self._decoder is None:
+            return raw, nraw, 0.0, 0
+        t0 = time.perf_counter()
+        payload = self._decoder(raw)
+        elapsed = time.perf_counter() - t0
+        measure = getattr(payload, "decoded_nbytes", None)
+        return payload, nraw, elapsed, measure() if measure else 0
 
     # ------------------------------------------------------------- required
     @abc.abstractmethod

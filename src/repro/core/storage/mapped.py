@@ -49,11 +49,15 @@ class MmapBackend(StorageBackend):
     def read(self, path: Path) -> memoryview:
         t0 = time.perf_counter()
         view = memoryview(self._map(path))
+        elapsed = time.perf_counter() - t0
+        payload, nraw, decode_s, decoded = self._run_decoder(view)
         with self._lock:
-            self.stats.wait_seconds += time.perf_counter() - t0
+            self.stats.wait_seconds += elapsed
             self.stats.chunk_reads += 1
-            self.stats.bytes_read += view.nbytes
-        return view
+            self.stats.bytes_read += nraw
+            self.stats.decode_seconds += decode_s
+            self.stats.decoded_bytes += decoded
+        return payload
 
     def read_range(self, path: Path, offset: int, length: int) -> memoryview:
         t0 = time.perf_counter()

@@ -63,8 +63,16 @@ class ParallelBackend(StorageBackend):
         self._lock = threading.Lock()
         self._closed = False
 
+    def _read_job(self, path: Path):
+        """Worker-side read + decode: decompression overlaps disk I/O.
+
+        Returns the ``_run_decoder`` tuple so the claiming thread can fold
+        physical-byte and decode-time stats in under the backend lock.
+        """
+        return self._run_decoder(self.inner.read(path))
+
     def _submit_locked(self, path: Path, origin: str = "hint") -> None:
-        self._futures[path] = self._pool.submit(self.inner.read, path)
+        self._futures[path] = self._pool.submit(self._read_job, path)
         self._origin[path] = origin
         if origin == "sched":
             self.stats.scheduled_issued += 1
@@ -159,9 +167,9 @@ class ParallelBackend(StorageBackend):
         if fut is None:
             # Cold miss: read inline — bouncing through the pool would only
             # add a thread round trip to an already-blocking read.
-            blob = self.inner.read(path)
+            blob, nraw, decode_s, decoded = self._read_job(path)
         else:
-            blob = fut.result()
+            blob, nraw, decode_s, decoded = fut.result()
         elapsed = time.perf_counter() - t0
         with self._lock:
             # Miss latency and prefetch-wait are different failure modes
@@ -173,7 +181,9 @@ class ParallelBackend(StorageBackend):
             else:
                 self.stats.wait_seconds += elapsed
             self.stats.chunk_reads += 1
-            self.stats.bytes_read += len(blob)
+            self.stats.bytes_read += nraw
+            self.stats.decode_seconds += decode_s
+            self.stats.decoded_bytes += decoded
         return blob
 
     def read_range(self, path: Path, offset: int, length: int) -> "bytes | memoryview":

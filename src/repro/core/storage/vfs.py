@@ -84,11 +84,15 @@ class VFSBackend(StorageBackend):
             blob = os.pread(fd, size, 0)
         finally:
             self._release(fd)
+        elapsed = time.perf_counter() - t0
+        payload, nraw, decode_s, decoded = self._run_decoder(blob)
         with self._lock:
-            self.stats.wait_seconds += time.perf_counter() - t0
+            self.stats.wait_seconds += elapsed
             self.stats.chunk_reads += 1
-            self.stats.bytes_read += len(blob)
-        return blob
+            self.stats.bytes_read += nraw
+            self.stats.decode_seconds += decode_s
+            self.stats.decoded_bytes += decoded
+        return payload
 
     def read_range(self, path: Path, offset: int, length: int) -> bytes:
         fd = self._acquire(path)

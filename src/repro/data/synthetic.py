@@ -80,9 +80,28 @@ class SyntheticTokenDataset:
     def build_store(
         self, root, chunk_size: int, *, num_slots: int | None = None,
         memory_bytes: int | None = None, seed: int = 0, backend="vfs",
+        spec=None, codec=None, level=None, bands=None,
     ) -> ChunkStore:
+        """Materialise the corpus as a chunk store at ``root``.
+
+        ``spec``/``codec``/``level``/``bands`` pass straight through to
+        :meth:`ChunkStore.build` (with ``spec=`` the backend belongs in
+        the spec, matching the store's own contract).
+        """
         plan = ChunkingPlan.create(
             self.sizes_bytes, chunk_size,
             num_slots=num_slots, memory_bytes=memory_bytes, seed=seed,
         )
-        return ChunkStore.build(root, plan, self, backend=backend)
+        if spec is not None:
+            # Forward everything so ChunkStore.build can reject the
+            # spec-plus-kwargs conflict itself (our "vfs" default is not
+            # an explicit backend choice, so it doesn't conflict).
+            return ChunkStore.build(
+                root, plan, self, spec=spec,
+                backend=None if backend == "vfs" else backend,
+                codec=codec, level=level, bands=bands,
+            )
+        return ChunkStore.build(
+            root, plan, self, backend=backend,
+            codec=codec, level=level, bands=bands,
+        )

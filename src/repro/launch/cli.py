@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 from pathlib import Path
 
+from ..core.storage.codec import CODECS
 from ..core.storage.store import BACKENDS
 
 __all__ = [
@@ -22,6 +23,7 @@ __all__ = [
     "add_device_args",
     "add_elastic_args",
     "add_obs_args",
+    "add_storage_args",
     "resolve_resume_dir",
 ]
 
@@ -64,8 +66,28 @@ def add_data_plane_args(
                    default="max_fill", help="redirection refill policy")
     g.add_argument("--engine", choices=["replay", "step", "per_access"],
                    default="replay", help="epoch execution engine")
+    add_storage_args(ap)
+
+
+def add_storage_args(ap: argparse.ArgumentParser) -> None:
+    """The chunk-store byte-representation knobs (DESIGN.md §15), shared
+    verbatim: how chunks are read (``--backend``), how a *fresh* store is
+    written (``--codec``/``--bands`` — an existing store's ``store.json``
+    wins), and how much of a progressive store to read (``--fidelity``).
+    """
+    g = ap.add_argument_group("storage")
     g.add_argument("--backend", choices=sorted(BACKENDS), default=None,
                    help="storage backend (default: the store's default)")
+    g.add_argument("--codec", choices=sorted(CODECS), default=None,
+                   help="per-chunk compression codec when building a fresh "
+                        "store (existing stores keep their store.json spec)")
+    g.add_argument("--bands", type=int, default=None, metavar="N",
+                   help="progressive fidelity bands per record when building "
+                        "a fresh store (1: flat records)")
+    g.add_argument("--fidelity", type=int, default=None, metavar="K",
+                   help="read only the first K fidelity bands of a "
+                        "progressive store (default: the autotuner's §6 "
+                        "choice under --autotune, else full fidelity)")
 
 
 def add_device_args(ap: argparse.ArgumentParser) -> None:

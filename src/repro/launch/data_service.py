@@ -106,9 +106,11 @@ def main(argv=None) -> int:
             ds.build_store(
                 root, args.chunk_size,
                 num_slots=args.groups * args.chunk_size, seed=args.seed,
-            )
+                codec=args.codec, bands=args.bands,
+            ).close()
         limit = int(args.cache_mb * 1e6) if args.cache_mb else None
         tuned_bw = None
+        fidelity = args.fidelity
         if args.autotune:
             from .. import autotune
 
@@ -132,6 +134,8 @@ def main(argv=None) -> int:
                 store = ChunkStore.open(root, backend=args.backend)
             if limit is None:
                 limit = choice.cache_limit_bytes
+            if fidelity is None:
+                fidelity = choice.fidelity
         else:
             store = ChunkStore.open(root, backend=args.backend or "vfs")
         admission = None
@@ -195,7 +199,7 @@ def main(argv=None) -> int:
                 svc.open_session(f"job{j}", SessionSpec(
                     policy=args.policy, seed=args.seed + 10 * j + 1,
                     batch_per_node=args.batch, seq_len=args.seq_len,
-                    engine=args.engine,
+                    engine=args.engine, fidelity=fidelity,
                 ))
         steps = {s.job_id: 0 for s in svc.sessions}
         demand = 0

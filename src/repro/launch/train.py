@@ -15,6 +15,7 @@ and consumes batches from the shared-memory ring (DESIGN.md §11).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import tempfile
 import time
 from pathlib import Path
@@ -140,6 +141,7 @@ def main() -> int:
         seq_len=args.seq_len,
         engine=args.engine,
         remote_memory_limit_bytes=1_000_000,
+        fidelity=args.fidelity,
     )
     data_dir = resolve_resume_dir(ap, args.resume_data, workdir / "ckpt" / "data")
     store = None
@@ -151,7 +153,8 @@ def main() -> int:
                                    mean_len=args.seq_len // 2, seed=args.seed + 5)
         store = ds.build_store(workdir / "chunks", chunk_size=16,
                                memory_bytes=int(ds.sizes_bytes.sum() // 4),
-                               seed=args.seed + 1)
+                               seed=args.seed + 1,
+                               codec=args.codec, bands=args.bands)
         if args.backend is not None:
             store.close()
             store = ChunkStore.open(workdir / "chunks", backend=args.backend)
@@ -179,6 +182,10 @@ def main() -> int:
                 workdir / "chunks",
                 backend=make_backend(choice.backend, **kwargs),
             )
+            # The §6 model's fidelity call on a progressive store — an
+            # explicit --fidelity wins (it's already in the spec).
+            if args.fidelity is None and choice.fidelity is not None:
+                spec = dataclasses.replace(spec, fidelity=choice.fidelity)
         if data_dir is not None and (data_dir / "loader_manifest.json").exists():
             loader = RedoxLoader.resume(data_dir, store)
             print(f"data plane resumed at epoch {loader.resume_point[0]} "

@@ -37,7 +37,11 @@ planned claim is farthest in the future. Entries with *no* planned next use
 all and are evicted first, least-recently-claimed among themselves — so a
 live-only service degrades exactly to LRU, and ``eviction="lru"`` forces
 that behaviour everywhere (the differential baseline for
-``benchmarks/eviction.py``). Belady also gates *admission*: an incoming
+``benchmarks/eviction.py``). On a compressed store (DESIGN.md §15) the
+cache holds *compressed frames* and each claim decodes its own copy, so
+``cache_limit_bytes`` counts compressed bytes — the codec's compression
+ratio directly multiplies how many chunks fit under the same cap.
+Belady also gates *admission*: an incoming
 chunk whose own next use is farther than every resident's is not cached at
 all (evicting a sooner-needed chunk for it could only lose). Evicted
 claims fall back to physical re-reads (``ServiceStats.evictions``,
@@ -87,10 +91,16 @@ def session_still_needs(cluster, chunk: int) -> bool:
 
 
 class _Entry:
-    __slots__ = ("records", "nbytes", "seq")
+    """One resident chunk: the store's *cacheable* payload — a compressed
+    :class:`~repro.core.storage.ChunkFrame` on framed stores, the raw blob
+    (or, for stores without the raw/decode split, the decoded record list)
+    otherwise. ``nbytes`` is the payload's physical footprint: the byte cap
+    counts compressed bytes, which is exactly the codec's capacity win."""
 
-    def __init__(self, records, nbytes: int, seq: int):
-        self.records = records
+    __slots__ = ("payload", "nbytes", "seq")
+
+    def __init__(self, payload, nbytes: int, seq: int):
+        self.payload = payload
         self.nbytes = nbytes
         self.seq = seq
 
@@ -112,6 +122,12 @@ class SharedResidency:
         self.store = store
         self.cache_limit_bytes = cache_limit_bytes
         self.eviction = eviction
+        # Stores exposing the raw/decode split (ChunkStore) are cached as
+        # compressed payloads and decoded per-claim; anything else (test
+        # doubles, wrappers) falls back to caching decoded records.
+        self._raw_reader = getattr(store, "read_chunk_raw", None)
+        self._decoder = getattr(store, "decode_chunk", None)
+        self._framed = bool(getattr(getattr(store, "spec", None), "framed", False))
         self._entries: "dict[int, _Entry]" = {}
         self._inflight: "dict[int, threading.Event]" = {}
         self._lock = threading.RLock()
@@ -255,10 +271,52 @@ class SharedResidency:
             self._sweep_locked()
 
     # ----------------------------------------------------------------- claims
-    def read_chunk(self, job, chunk: int, *, epoch: "int | None" = None):
+    def _read_physical(self, chunk: int):
+        """One storage read, in the store's cacheable form."""
+        if self._raw_reader is not None:
+            return self._raw_reader(chunk)
+        return list(self.store.read_chunk(chunk))
+
+    def _payload_nbytes(self, chunk: int, payload) -> int:
+        """Physical footprint of a cacheable payload (compressed bytes on
+        framed stores; logical plan bytes for fallback record lists)."""
+        if self._raw_reader is None:
+            return int(self.store.plan.chunk_bytes[chunk])
+        physical = getattr(payload, "physical_bytes", None)
+        if physical is not None:
+            return int(physical)
+        return memoryview(payload).nbytes
+
+    def _decode_claim(self, st: ServiceStats, chunk: int, payload, fidelity):
+        """Per-claim decode, outside the lock: every claim of a framed
+        chunk decompresses its own copy so the cache itself only ever
+        holds compressed bytes."""
+        if self._decoder is None:
+            records = payload  # fallback stores cache decoded records
+        else:
+            t0 = time.perf_counter()
+            records = self._decoder(chunk, payload, fidelity)
+            decode_s = time.perf_counter() - t0
+        logical = sum(len(b) for _, b in records)
+        with self._lock:
+            st.logical_bytes += logical
+            if self._framed:
+                st.decode_claims += 1
+                st.decode_s += decode_s
+        return records
+
+    def read_chunk(
+        self,
+        job,
+        chunk: int,
+        *,
+        epoch: "int | None" = None,
+        fidelity: "int | None" = None,
+    ):
         """Serve one chunk claim for ``job`` (consuming epoch ``epoch``):
         shared-cache hit or physical read. Returns the store's
-        ``[(file_id, bytes), ...]`` records."""
+        ``[(file_id, bytes), ...]`` records, decoded at the claiming
+        session's ``fidelity`` (None: the store's default)."""
         chunk = int(chunk)
         tracer = trace.get()
         t0 = time.perf_counter() if tracer is not None else 0.0
@@ -272,39 +330,48 @@ class SharedResidency:
                     st.shared_bytes += e.nbytes
                     self._seq += 1
                     e.seq = self._seq
-                    records = e.records
+                    payload = e.payload
                     self._maybe_release_locked(chunk)
-                    if tracer is not None:
-                        tracer.complete(
-                            "residency.claim", "read", t0,
-                            time.perf_counter() - t0,
-                            {"chunk": chunk, "hit": True},
-                        )
-                    return records
+                    hit = True
+                    break
                 ev = self._inflight.get(chunk)
                 if ev is None:
                     ev = threading.Event()
                     self._inflight[chunk] = ev
+                    hit = False
                     break
             # Another session is already reading this chunk; wait for its
             # insert, then retry (shared hit, or read ourselves if it chose
             # not to retain).
             ev.wait()
+        if hit:
+            records = self._decode_claim(st, chunk, payload, fidelity)
+            if tracer is not None:
+                tracer.complete(
+                    "residency.claim", "read", t0,
+                    time.perf_counter() - t0,
+                    {"chunk": chunk, "hit": True},
+                )
+            return records
         try:
-            records = list(self.store.read_chunk(chunk))
+            payload = self._read_physical(chunk)
+            # Decode before insert: the first claim consumes the backend
+            # worker's eager decode, so the payload that gets cached is
+            # stripped back to compressed bytes only.
+            records = self._decode_claim(st, chunk, payload, fidelity)
         except BaseException:
             with self._lock:
                 self._inflight.pop(chunk, None)
             ev.set()
             raise
-        nbytes = int(self.store.plan.chunk_bytes[chunk])
+        nbytes = self._payload_nbytes(chunk, payload)
         with self._lock:
             self._note_claim_locked(job, epoch, chunk)
             st.physical_reads += 1
             st.physical_bytes += nbytes
             self._inflight.pop(chunk, None)
             if self._retain_locked(chunk):
-                self._insert_locked(job, chunk, records, nbytes)
+                self._insert_locked(job, chunk, payload, nbytes)
             ev.set()
         if tracer is not None:
             tracer.complete(
@@ -394,7 +461,7 @@ class SharedResidency:
         st.cache_bypass += 1
         trace.instant("residency.cache_bypass", "read", chunk=chunk, reason=reason)
 
-    def _insert_locked(self, job, chunk: int, records, nbytes: int) -> None:
+    def _insert_locked(self, job, chunk: int, payload, nbytes: int) -> None:
         st = self.job_stats(job)
         limit = self.cache_limit_bytes
         if limit is not None:
@@ -437,6 +504,6 @@ class SharedResidency:
                 self._bypass_locked(st, chunk, "over_limit")
                 return
         self._seq += 1
-        self._entries[chunk] = _Entry(records, nbytes, self._seq)
+        self._entries[chunk] = _Entry(payload, nbytes, self._seq)
         self.cache_bytes += nbytes
         self.peak_cache_bytes = max(self.peak_cache_bytes, self.cache_bytes)

@@ -118,10 +118,20 @@ class _SessionStore:
         self._service = service
         self._job = job_id
         self._real = service.store
+        #: Per-session progressive fidelity (DESIGN.md §15): set by
+        #: ``RedoxLoader.from_spec`` when the session's spec asks for
+        #: truncated bands; claims decode at this fidelity without
+        #: affecting other sessions sharing the store.
+        self.default_fidelity: "int | None" = None
 
     @property
     def plan(self):
         return self._real.plan
+
+    @property
+    def spec(self):
+        """The shared store's StoreSpec (None for spec-less store doubles)."""
+        return getattr(self._real, "spec", None)
 
     @property
     def backend_stats(self):
@@ -139,7 +149,9 @@ class _SessionStore:
         self._real.prefetch_chunks(chunks)
 
     def read_chunk(self, chunk: int):
-        return self._service._read_chunk(self._job, chunk)
+        return self._service._read_chunk(
+            self._job, chunk, fidelity=self.default_fidelity
+        )
 
     def read_file(self, file_id: int):
         return self._real.read_file(file_id)
@@ -601,11 +613,12 @@ class DataService:
                 plan = self.plan_epoch(epoch).get(session.job_id)
             return plan
 
-    def _read_chunk(self, job_id, chunk: int):
+    def _read_chunk(self, job_id, chunk: int, fidelity: "int | None" = None):
         """Session-store read path: claims land in the pool of the epoch the
         job is currently consuming."""
         return self.residency.read_chunk(
-            job_id, chunk, epoch=self._active_epoch.get(job_id)
+            job_id, chunk,
+            epoch=self._active_epoch.get(job_id), fidelity=fidelity,
         )
 
     def _joint_plan(self, sessions, epoch):

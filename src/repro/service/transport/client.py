@@ -23,7 +23,7 @@ import json
 import threading
 from pathlib import Path
 
-from ...core.spec import SessionSpec
+from ...core.spec import SessionSpec, StoreSpec
 from .ring import (
     FRAME_BATCH,
     FRAME_EOE,
@@ -78,6 +78,11 @@ class RedoxClient:
             msg["resume_from"] = str(resume_from)
         resp = self._rpc(msg)
         self.spec = SessionSpec.from_json(resp["spec"])
+        store = resp.get("store")
+        #: The served store's frozen StoreSpec — codec, level, bands — so
+        #: the trainer knows the byte representation without guessing
+        #: (None when talking to a store double or an older server).
+        self.store_spec = StoreSpec.from_json(store) if store else None
         rp = resp.get("resume_point")
         #: (epoch, next_step) the server will continue from, if resumed.
         self.resume_point = tuple(rp) if rp else None

@@ -432,11 +432,15 @@ class DataServiceServer:
         with self._lock:
             self._endpoints[job_id] = ep
         rp = session.loader.resume_point
+        store_spec = getattr(svc.store, "spec", None)
         return {
             "ok": True,
             "ring": str(ring_path),
             "budget": budget,
             "spec": spec.to_json(),
+            # The served store's StoreSpec (DESIGN.md §15), so remote
+            # trainers resolve the codec/bands without guessing.
+            "store": store_spec.to_json() if store_spec is not None else None,
             "resume_point": list(rp) if rp is not None else None,
         }, job_id
 

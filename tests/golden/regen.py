@@ -1,13 +1,16 @@
 #!/usr/bin/env python
-"""Regenerate tests/golden/streams.json (the golden-stream fixtures).
+"""Regenerate the golden fixtures: streams.json (protocol streams) and
+frames.json (compressed chunk frames, tests/test_codec.py).
 
 Run after an *intentional* change to the protocol's shuffle/redirection
-behaviour, then review the diff — an unintentional stream change should
-fail tests/test_golden_streams.py instead of being regenerated away:
+behaviour or the frame container format, then review the diff — an
+unintentional change should fail the golden tests instead of being
+regenerated away:
 
     python tests/golden/regen.py
 """
 
+import base64
 import json
 import sys
 from pathlib import Path
@@ -19,10 +22,38 @@ sys.path.insert(0, str(HERE.parents[1]))  # tests/ for elastic_harness
 from elastic_harness import golden_streams  # noqa: E402
 
 
+def golden_frames() -> list:
+    """One framed chunk per registry codec: the raw band payloads (what
+    decode must return) plus the encoded frame bytes (what parse_frame
+    must accept — decode stability across codec versions, not encode
+    byte-equality, is the pinned contract)."""
+    from repro.core.storage.codec import CODECS, band_cuts, encode_frame
+
+    # Deterministic compressible "records": repetitive token-ish bytes.
+    body = bytes(
+        (7 * i + (i >> 3)) % 251 for i in range(1536)
+    ) + b"\x00\x01\x02\x03" * 128
+    cuts = band_cuts(len(body), 3)
+    bands = [body[cuts[b]:cuts[b + 1]] for b in range(3)]
+    out = []
+    for name in sorted(CODECS):
+        codec = CODECS[name]
+        frame = encode_frame(name, [codec.encode(b) for b in bands])
+        out.append({
+            "codec": name,
+            "bands": [base64.b64encode(b).decode() for b in bands],
+            "frame": base64.b64encode(bytes(frame)).decode(),
+        })
+    return out
+
+
 def main() -> int:
     out = HERE.parent / "streams.json"
     out.write_text(json.dumps(golden_streams(), indent=1) + "\n")
     print(f"wrote {out}")
+    frames = HERE.parent / "frames.json"
+    frames.write_text(json.dumps(golden_frames(), indent=1) + "\n")
+    print(f"wrote {frames}")
     return 0
 
 

@@ -1,0 +1,356 @@
+"""Compressed & progressive chunk storage (DESIGN.md §15).
+
+The storage-codec contract under test:
+
+* every registry codec round-trips arbitrary bytes, and the frame
+  container (RXF1) round-trips band payloads — pinned by golden fixtures
+  in ``tests/golden/frames.json`` (decode stability, not encode
+  byte-equality, is the contract: a codec may legitimately produce
+  different bytes across library versions as long as old frames decode);
+* a compressed store serves the exact same epoch stream as a raw one at
+  full fidelity — for every engine — while reading strictly fewer
+  physical bytes;
+* truncated fidelity returns strict token-prefixes of the full records;
+* ``StoreSpec`` is the one source of truth: persisted as ``store.json``
+  so ``ChunkStore.open(root)`` needs no flags, refuses a conflicting
+  explicit spec, and rejects mixed-codec chunk files at open();
+* ``SharedResidency`` caches *compressed* frames: its byte cap counts
+  physical bytes, decode happens per-claim.
+"""
+
+import base64
+import json
+import shutil
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import ChunkStore, RedoxLoader, SessionSpec, StoreSpec
+from repro.core.storage import ParallelBackend
+from repro.core.storage.codec import (
+    CODECS,
+    FRAME_MAGIC,
+    ChunkFrame,
+    band_cuts,
+    encode_frame,
+    get_codec,
+    parse_frame,
+    peek_frame,
+)
+from repro.data import SyntheticTokenDataset
+from repro.service import DataService
+
+pytestmark = pytest.mark.backend
+
+NUM_DOCS = 192
+
+
+def make_dataset():
+    return SyntheticTokenDataset(NUM_DOCS, vocab_size=97, mean_len=48, seed=3)
+
+
+def build(tmp_path, name, **kwargs):
+    """Build a store with the shared dataset/plan params; only the byte
+    representation (codec/level/bands/spec) varies between stores."""
+    ds = make_dataset()
+    return ds.build_store(tmp_path / name, 4, num_slots=16, seed=1, **kwargs)
+
+
+# ----------------------------------------------------------------- codecs
+class TestCodecs:
+    PAYLOADS = [
+        b"",
+        b"\x00" * 4096,
+        bytes(range(256)) * 7,
+        b"abcabcabcabcabc" * 100,
+        np.random.default_rng(5).integers(0, 255, 3000, np.uint8).tobytes(),
+    ]
+
+    @pytest.mark.parametrize("name", sorted(CODECS))
+    def test_round_trip(self, name):
+        codec = CODECS[name]
+        for payload in self.PAYLOADS:
+            enc = codec.encode(payload)
+            assert bytes(codec.decode(enc)) == payload
+
+    def test_registry_lookup(self):
+        assert get_codec("zlib").name == "zlib"
+        with pytest.raises(ValueError, match="unknown codec"):
+            get_codec("zstd")
+
+    def test_compressible_data_actually_shrinks(self):
+        body = b"the quick brown fox " * 500
+        for name in ("zlib", "lz4"):
+            assert len(CODECS[name].encode(body)) < len(body)
+
+    def test_band_cuts_partition_and_align(self):
+        cuts = band_cuts(1200, 3)  # 4-aligned sizes stay 4-aligned
+        assert cuts[0] == 0 and cuts[-1] == 1200
+        assert all(c % 4 == 0 for c in cuts)
+        assert cuts == sorted(cuts)
+        # one band is the whole payload; degenerate sizes still partition
+        assert band_cuts(1200, 1) == [0, 1200]
+        assert band_cuts(2, 3)[-1] == 2
+
+    def test_frame_round_trip(self):
+        bands = [b"aaaa" * 10, b"bbbb" * 5, b"cc"]
+        frame = bytes(encode_frame("none", bands))
+        assert frame.startswith(FRAME_MAGIC)
+        assert peek_frame(frame[:16]) == ("none", 3)
+        parsed = parse_frame(frame)
+        assert isinstance(parsed, ChunkFrame)
+        assert parsed.nbands == 3
+        assert [bytes(b) for b in parsed.decode_bands(3)] == bands
+
+    def test_truncated_frame_rejected(self):
+        frame = bytes(encode_frame("zlib", [b"x" * 100]))
+        with pytest.raises(ValueError):
+            parse_frame(frame[:-3])
+        assert peek_frame(b"notaframe") is None
+
+    def test_golden_frames_decode(self):
+        """Frames written by past versions must keep decoding bit-exactly
+        (regenerate deliberately with tests/golden/regen.py)."""
+        fixtures = json.loads(
+            (Path(__file__).parent / "golden" / "frames.json").read_text()
+        )
+        assert {f["codec"] for f in fixtures} == set(CODECS)
+        for fx in fixtures:
+            frame = parse_frame(base64.b64decode(fx["frame"]))
+            want = [base64.b64decode(b) for b in fx["bands"]]
+            assert frame.codec_name == fx["codec"]
+            got = frame.decode_bands(frame.nbands)
+            assert [bytes(b) for b in got] == want
+
+
+# -------------------------------------------------------------- StoreSpec
+class TestStoreSpec:
+    def test_json_round_trip(self):
+        spec = StoreSpec(backend="mmap", codec="zlib", level=6, bands=4,
+                         backend_kwargs={"x": 1})
+        assert StoreSpec.from_json(spec.to_json()) == spec
+
+    def test_strict_unknown_field(self):
+        with pytest.raises((TypeError, ValueError)):
+            StoreSpec.from_json({"backend": "vfs", "compression": "zlib"})
+
+    def test_validates(self):
+        with pytest.raises(ValueError):
+            StoreSpec(codec="zstd")
+        with pytest.raises(ValueError):
+            StoreSpec(bands=0)
+
+    def test_from_kwargs_shim(self):
+        """The historical ``backend="vfs"``/backend-object call sites keep
+        working: unknown kwargs land in backend_kwargs."""
+        spec = StoreSpec.from_kwargs("parallel", codec="lz4", readahead=4)
+        assert spec.backend == "parallel" and spec.codec == "lz4"
+        assert spec.backend_kwargs == {"readahead": 4}
+        obj = ParallelBackend(workers=1)
+        assert StoreSpec.from_kwargs(obj).backend == obj.name
+        obj.close()
+
+    def test_framed_property(self):
+        assert not StoreSpec().framed
+        assert StoreSpec(codec="zlib").framed
+        assert StoreSpec(bands=2).framed
+
+
+# ------------------------------------------------- store.json persistence
+class TestOpenRoundTrip:
+    def test_open_no_kwargs_round_trips_spec(self, tmp_path):
+        spec = StoreSpec(codec="zlib", level=6, bands=3)
+        built = build(tmp_path, "c", spec=spec)
+        built.close()
+        store = ChunkStore.open(tmp_path / "c")  # no flags at all
+        assert store.spec == spec
+        store.close()
+
+    def test_legacy_store_without_sidecar_opens_raw(self, tmp_path):
+        built = build(tmp_path, "raw")
+        built.close()
+        (tmp_path / "raw" / "store.json").unlink()  # pre-§15 store
+        store = ChunkStore.open(tmp_path / "raw")
+        assert store.spec == StoreSpec()
+        store.close()
+
+    def test_conflicting_explicit_spec_refused(self, tmp_path):
+        build(tmp_path, "c", codec="zlib", bands=2).close()
+        with pytest.raises(ValueError, match="conflicts"):
+            ChunkStore.open(tmp_path / "c", spec=StoreSpec(codec="none"))
+        # the exact stored spec is fine to repeat explicitly
+        store = ChunkStore.open(
+            tmp_path / "c", spec=StoreSpec(codec="zlib", bands=2)
+        )
+        store.close()
+
+    def test_build_rejects_spec_plus_kwargs(self, tmp_path):
+        with pytest.raises(ValueError, match="not both"):
+            build(tmp_path, "x", spec=StoreSpec(codec="zlib"), codec="lz4")
+
+    def test_mixed_codec_rejected_at_open(self, tmp_path):
+        """A chunk file smuggled in from a store with a different codec
+        fails the open()-time frame sweep, not a mid-epoch decode."""
+        build(tmp_path, "a", codec="zlib", bands=2).close()
+        build(tmp_path, "b", codec="lz4", bands=2).close()
+        shutil.copy(
+            tmp_path / "b" / "chunk_00000000.bin",
+            tmp_path / "a" / "chunk_00000000.bin",
+        )
+        with pytest.raises(ValueError, match="mixed-codec"):
+            ChunkStore.open(tmp_path / "a")
+
+
+# --------------------------------------------------- read paths & parity
+@pytest.mark.parametrize("codec", ["zlib", "lz4"])
+class TestCompressedParity:
+    def test_chunks_byte_identical_to_raw(self, tmp_path, codec):
+        raw = build(tmp_path, "raw")
+        comp = build(tmp_path, "comp", codec=codec, bands=3)
+        for k in range(raw.plan.num_chunks):
+            a, b = raw.read_chunk(k), comp.read_chunk(k)
+            assert [f for f, _ in a] == [f for f, _ in b]
+            for (_, x), (_, y) in zip(a, b):
+                assert bytes(x) == bytes(y)
+        # ... while the files on disk are strictly smaller
+        nraw = sum(
+            raw.chunk_path(k).stat().st_size for k in range(raw.plan.num_chunks)
+        )
+        ncomp = sum(
+            comp.chunk_path(k).stat().st_size
+            for k in range(comp.plan.num_chunks)
+        )
+        assert ncomp < nraw
+        raw.close()
+        comp.close()
+
+    def test_read_file_on_compressed_store(self, tmp_path, codec):
+        """Ranged per-file reads can't seek into compressed frames — the
+        store decodes the whole chunk (cached) and slices (regression:
+        the first framed implementation returned compressed garbage)."""
+        raw = build(tmp_path, "raw")
+        comp = build(tmp_path, "comp", codec=codec, bands=2)
+        for fid in range(0, raw.plan.num_files, 7):
+            assert bytes(comp.read_file(fid)) == bytes(raw.read_file(fid))
+        # chunk-and-ranged agreement on the compressed store itself
+        for fid, blob in comp.read_chunk(0):
+            assert bytes(comp.read_file(fid)) == bytes(blob)
+        raw.close()
+        comp.close()
+
+    def test_truncated_fidelity_is_strict_prefix(self, tmp_path, codec):
+        comp = build(tmp_path, "comp", codec=codec, bands=3)
+        full = {k: comp.read_chunk(k, fidelity=3)
+                for k in range(comp.plan.num_chunks)}
+        for fidelity in (1, 2):
+            shorter = 0
+            for k, ref in full.items():
+                got = comp.read_chunk(k, fidelity=fidelity)
+                assert [f for f, _ in got] == [f for f, _ in ref]
+                for (_, x), (_, y) in zip(got, ref):
+                    x, y = bytes(x), bytes(y)
+                    assert y.startswith(x)
+                    assert len(x) % 4 == 0 or len(x) == len(y)  # token cut
+                    shorter += len(x) < len(y)
+            assert shorter > 0  # truncation actually happened
+        comp.close()
+
+    def test_parallel_backend_decodes_on_workers(self, tmp_path, codec):
+        comp = build(tmp_path, "comp", codec=codec, bands=2)
+        comp.close()
+        store = ChunkStore.open(
+            tmp_path / "comp", backend=ParallelBackend(workers=2)
+        )
+        store.schedule_reads(list(range(store.plan.num_chunks)))
+        logical = 0
+        for k in range(store.plan.num_chunks):
+            logical += sum(len(b) for _, b in store.read_chunk(k))
+        st = store.backend_stats
+        physical = sum(
+            store.chunk_path(k).stat().st_size
+            for k in range(store.plan.num_chunks)
+        )
+        assert st.scheduled_hits == store.plan.num_chunks  # prefetched...
+        assert st.bytes_read == physical       # ...accounting compressed
+        assert st.decoded_bytes >= logical     # decode ran inside the pool
+        assert st.decode_seconds > 0
+        store.close()
+
+
+# -------------------------------------------------- epoch-stream identity
+@pytest.mark.parametrize("engine", ["replay", "step", "per_access"])
+def test_epoch_stream_identical_raw_vs_compressed(tmp_path, engine):
+    """The acceptance gate: at full fidelity a compressed store yields a
+    byte-identical epoch stream through every execution engine, while
+    physically reading fewer bytes."""
+    spec = SessionSpec(seed=2, sampler_seed=4, batch_per_node=16,
+                       seq_len=32, engine=engine)
+    streams, physical = {}, {}
+    for name, kwargs in (
+        ("raw", {}), ("zlib", {"codec": "zlib", "bands": 2})
+    ):
+        store = build(tmp_path, f"{engine}-{name}", **kwargs)
+        loader = RedoxLoader.from_spec(spec, store)
+        streams[name] = [
+            (batch["tokens"].tobytes(), batch["returned"].tobytes())
+            for batch in loader.epoch(0)
+        ]
+        physical[name] = store.backend_stats.bytes_read
+        store.close()
+    assert streams["zlib"] == streams["raw"]
+    assert 0 < physical["zlib"] < physical["raw"]
+
+
+# ------------------------------------------------- residency byte account
+class TestCompressedResidency:
+    def test_cap_counts_compressed_bytes(self, tmp_path):
+        """The shared cache holds compressed frames: a cap equal to the
+        total *compressed* footprint never evicts even though the logical
+        bytes served are far larger, and the stats split the two."""
+        build(tmp_path, "c", codec="zlib", bands=2).close()
+        store = ChunkStore.open(tmp_path / "c")
+        physical_total = sum(
+            store.chunk_path(k).stat().st_size
+            for k in range(store.plan.num_chunks)
+        )
+        logical_total = int(np.asarray(store.plan.chunk_bytes).sum())
+        assert physical_total < logical_total
+        svc = DataService(store, cache_limit_bytes=physical_total)
+        for j in range(2):
+            svc.open_session(f"j{j}", seed=100 + 7 * j, batch_per_node=16,
+                             seq_len=32)
+        returned = {f"j{j}": [] for j in range(2)}
+        for job_id, batch in svc.co_epoch(0):
+            returned[job_id].append(batch["returned"])
+        for job_id, chunks in returned.items():
+            ids = np.concatenate(chunks)
+            assert sorted(ids.tolist()) == list(range(NUM_DOCS)), job_id
+        res = svc.residency
+        assert res.evictions == 0           # cap was measured in frames
+        assert res.peak_cache_bytes <= physical_total
+        agg = svc.aggregate_stats()
+        assert agg.physical_bytes <= physical_total
+        assert agg.decode_claims > 0        # every claim decoded its copy
+        assert agg.logical_bytes >= logical_total  # both jobs served fully
+        assert agg.logical_bytes > agg.physical_bytes + agg.shared_bytes
+        svc.close()
+        store.close()
+
+    def test_session_fidelity_scopes_to_one_job(self, tmp_path):
+        """Per-session fidelity through the service facade: a truncated
+        session reads prefixes while a concurrent full-fidelity session
+        sees complete records off the same cached frames."""
+        build(tmp_path, "c", codec="zlib", bands=2).close()
+        store = ChunkStore.open(tmp_path / "c")
+        svc = DataService(store)
+        kwargs = dict(seed=2, sampler_seed=4, batch_per_node=16, seq_len=64)
+        lo = svc.open_session("lo", fidelity=1, **kwargs)
+        hi = svc.open_session("hi", **kwargs)
+        lo_lens, hi_lens = [], []
+        for sess, out in ((lo, lo_lens), (hi, hi_lens)):
+            for batch in sess.epoch(0):
+                out.append(int(batch["loss_mask"].sum()))
+        assert sum(lo_lens) < sum(hi_lens)  # truncation shortened records
+        svc.close()
+        store.close()

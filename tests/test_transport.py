@@ -536,9 +536,12 @@ class TestLaunchCLI:
 
     SHARED = [
         "--batch", "--seq-len", "--num-docs", "--vocab-size", "--seed",
-        "--policy", "--engine", "--backend", "--resume-data",
-        "--suspend-after",
+        "--policy", "--engine", "--backend", "--codec", "--bands",
+        "--fidelity", "--resume-data", "--suspend-after",
     ]
+    #: The storage subset (launch.cli.add_storage_args) that
+    #: examples/train_lm.py must also spell identically.
+    STORAGE = ["--backend", "--codec", "--bands", "--fidelity"]
     # Builder parameters: these defaults intentionally differ per launcher
     # (historical CLI defaults); everything else must match exactly.
     PER_LAUNCHER_DEFAULTS = {"--batch", "--seq-len", "--num-docs"}
@@ -561,6 +564,26 @@ class TestLaunchCLI:
                 assert getattr(t, attr) == getattr(s, attr), (opt, attr)
             if opt not in self.PER_LAUNCHER_DEFAULTS:
                 assert t.default == s.default, opt
+
+    def test_storage_flags_shared_with_example(self):
+        """examples/train_lm.py composes add_storage_args too — same
+        spelling for every byte-representation knob."""
+        import importlib.util
+
+        from repro.launch.train import build_parser as train_parser
+
+        path = Path(__file__).parent.parent / "examples" / "train_lm.py"
+        ex = importlib.util.spec_from_file_location("train_lm_example", path)
+        mod = importlib.util.module_from_spec(ex)
+        ex.loader.exec_module(mod)
+        ta, ea = self._actions(train_parser()), self._actions(mod.build_parser())
+        for opt in self.STORAGE:
+            assert opt in ea, f"train_lm.py lost {opt}"
+            for attr in ("type", "choices", "nargs", "const", "metavar",
+                         "help", "default"):
+                assert getattr(ta[opt], attr) == getattr(ea[opt], attr), (
+                    opt, attr
+                )
 
     def test_engine_choices_track_session_spec(self):
         from repro.core.spec import _ENGINES
